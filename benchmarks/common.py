@@ -1,0 +1,34 @@
+"""Shared helpers for the figure-reproduction benchmarks."""
+
+from __future__ import annotations
+
+from repro.core import (
+    TABLE_II,
+    ScenarioConfig,
+    Transport,
+    local_reference,
+    run_scenario,
+)
+
+T_ALL = (Transport.LOCAL, Transport.GDR, Transport.RDMA, Transport.TCP)
+T_NET = (Transport.GDR, Transport.RDMA, Transport.TCP)
+
+
+def mean_ms(store) -> float:
+    return store.summary()["mean"] * 1e3
+
+
+def run_ms(workload: str, transport: Transport, **kw) -> float:
+    if transport is Transport.LOCAL:
+        return local_reference(
+            ScenarioConfig(workload=TABLE_II[workload], **{
+                k: v for k, v in kw.items() if k == "preprocessed"
+            })
+        ) * 1e3
+    cfg = ScenarioConfig(workload=TABLE_II[workload], transport=transport, **kw)
+    return mean_ms(run_scenario(cfg))
+
+
+def emit(name: str, value_us: float, derived: str = ""):
+    """CSV row in the harness's required format."""
+    print(f"{name},{value_us:.2f},{derived}")

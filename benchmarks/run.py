@@ -1,0 +1,96 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows for every measured point, then a
+paper-claim validation summary (PASS/FAIL per claim). Also times the Pallas
+kernels (interpret mode on CPU — correctness-representative, not wall-clock
+-representative; TPU wall-clock comes from the §Roofline dry-run terms).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fig fig05] [--skip-kernels]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def bench_kernels():
+    """us/call for each Pallas kernel (interpret) vs its jnp oracle."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops, ref
+    from benchmarks.common import emit
+
+    rng = np.random.default_rng(0)
+
+    def t(fn, *a, n=3, **k):
+        fn(*a, **k)  # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(n):
+            r = fn(*a, **k)
+        import jax
+
+        jax.block_until_ready(r)
+        return (time.perf_counter() - t0) / n * 1e6
+
+    q = jnp.asarray(rng.normal(size=(1, 256, 8, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.bfloat16)
+    emit("kernel/flash_attention/interp", t(ops.flash_attention, q, k, v))
+    emit("kernel/flash_attention/oracle", t(ref.flash_attention_ref, q, k, v))
+
+    q1 = q[:, :1]
+    lens = jnp.asarray([256], jnp.int32)
+    emit("kernel/decode_attention/interp", t(ops.decode_attention, q1, k, v, lens))
+    emit("kernel/decode_attention/oracle", t(ref.decode_attention_ref, q1, k, v, lens))
+
+    x = jnp.asarray(rng.normal(size=(1, 256, 4, 32)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.normal(size=(1, 256, 4)), jnp.float32)) * 0.1
+    A = -jnp.abs(jnp.asarray(rng.normal(size=(4,)), jnp.float32))
+    B = jnp.asarray(rng.normal(size=(1, 256, 1, 16)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(1, 256, 1, 16)), jnp.float32)
+    emit("kernel/ssd_scan/interp", t(ops.ssd_scan, x, dt, A, B, C, chunk=64))
+    emit("kernel/ssd_scan/oracle", t(ref.ssd_scan_ref, x, dt, A, B, C))
+
+    xr = jnp.asarray(rng.normal(size=(512, 512)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(512,)), jnp.bfloat16)
+    emit("kernel/rmsnorm/interp", t(ops.rmsnorm, xr, w))
+    xu = jnp.asarray(rng.integers(0, 256, (512, 512)), jnp.uint8)
+    m = jnp.abs(jnp.asarray(rng.normal(size=(512,)), jnp.float32)) + 0.1
+    s = jnp.abs(jnp.asarray(rng.normal(size=(512,)), jnp.float32)) + 0.3
+    emit("kernel/preprocess/interp", t(ops.preprocess, xu, m, s))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fig", default=None, help="run a single figure, e.g. fig05")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.figures import ALL_FIGURES
+
+    claims = []
+    for fn in ALL_FIGURES:
+        if args.fig and not fn.__name__.startswith(args.fig):
+            continue
+        t0 = time.perf_counter()
+        claims.extend(fn() or [])
+        print(f"# {fn.__name__} done in {time.perf_counter()-t0:.1f}s", file=sys.stderr)
+
+    if not args.skip_kernels and not args.fig:
+        bench_kernels()
+
+    print("\n# === paper-claim validation ===")
+    fails = 0
+    for desc, ok in claims:
+        print(f"# {'PASS' if ok else 'FAIL'}  {desc}")
+        fails += 0 if ok else 1
+    print(f"# {len(claims)-fails}/{len(claims)} claims reproduced")
+    if fails:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Disaggregated prefill->decode: the paper's proxied-connection study mapped
+onto a modern LLM serving pattern (DESIGN.md §2).
+
+Pod 0 runs prefill, pod 1 decodes; the KV cache crosses the pod boundary via
+``core.transfer.kv_transfer`` in each of the three modes (DIRECT_HBM = GDR,
+DIRECT_DMA = RDMA, HOST_STAGED = TCP). Runs on 8 forced host devices
+(2 pods x 2 data x 2 model) and reports per-mode wire bytes + the modeled
+transfer latency on both calibration profiles.
+
+Run: PYTHONPATH=src python examples/disaggregated_prefill.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.configs import get_config
+from repro.core.transfer import TransferMode, kv_transfer, transfer_bytes
+from repro.core.transport import PAPER_A2, TPU_V5E, Transport
+from repro.models import Model
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+    cfg = get_config("llama3-8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+
+    B, S = 2, 32
+    toks = jnp.asarray(np.arange(B * S).reshape(B, S) % cfg.vocab_size, jnp.int32)
+    _, caches, _ = model.prefill(params, {"tokens": toks})
+
+    # tile the cache across pods: leaf -> [npods, ...] (pod-sharded)
+    tiled = jax.tree.map(lambda x: jnp.stack([x, jnp.zeros_like(x)]), caches)
+
+    print(f"prefill produced KV cache for {cfg.name}: "
+          f"{sum(l.nbytes for l in jax.tree.leaves(caches))/1e6:.2f} MB/sequence-batch")
+    with mesh:
+        for mode in TransferMode:
+            moved = kv_transfer(tiled, mesh, mode=mode)
+            jax.block_until_ready(moved)
+            # pod1 must now hold pod0's cache (ring 0->1)
+            got = jax.tree.leaves(moved)[0][1]
+            want = jax.tree.leaves(tiled)[0][0]
+            if mode is not TransferMode.HOST_STAGED:  # staged is int8-lossy
+                np.testing.assert_allclose(
+                    np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    atol=1e-6,
+                )
+            nbytes = transfer_bytes(tiled, mode)
+            t_a2 = PAPER_A2.wire_time(
+                {TransferMode.DIRECT_HBM: Transport.GDR,
+                 TransferMode.DIRECT_DMA: Transport.RDMA,
+                 TransferMode.HOST_STAGED: Transport.TCP}[mode], nbytes)
+            t_tpu = TPU_V5E.wire_time(
+                {TransferMode.DIRECT_HBM: Transport.GDR,
+                 TransferMode.DIRECT_DMA: Transport.RDMA,
+                 TransferMode.HOST_STAGED: Transport.TCP}[mode], nbytes)
+            extra = "" if mode is not TransferMode.DIRECT_DMA else " + copy-engine hop"
+            print(f"  {mode.value:12s}: {nbytes/1e6:7.2f} MB on the wire; "
+                  f"modeled {t_a2*1e3:7.2f} ms (25GbE A2) / "
+                  f"{t_tpu*1e3:6.2f} ms (v5e DCN){extra}")
+    print("\ntakeaway: DIRECT_HBM (GDR analogue) moves the full-precision cache "
+          "with zero staging copies;\nHOST_STAGED pays requantization + staging "
+          "— the paper's protocol-translation trade (finding 2).")
+
+
+if __name__ == "__main__":
+    main()

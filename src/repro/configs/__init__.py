@@ -1,0 +1,55 @@
+"""Architecture registry: the 10 assigned configs + the 4 input shapes."""
+
+from __future__ import annotations
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from repro.configs.shapes import SHAPES, InputShape, get_shape
+
+from repro.configs.pixtral_12b import CONFIG as PIXTRAL_12B
+from repro.configs.llama3_8b import CONFIG as LLAMA3_8B
+from repro.configs.jamba_v01_52b import CONFIG as JAMBA_V01_52B
+from repro.configs.deepseek_v2_236b import CONFIG as DEEPSEEK_V2_236B
+from repro.configs.seamless_m4t_large_v2 import CONFIG as SEAMLESS_M4T_LARGE_V2
+from repro.configs.qwen3_32b import CONFIG as QWEN3_32B
+from repro.configs.starcoder2_3b import CONFIG as STARCODER2_3B
+from repro.configs.grok1_314b import CONFIG as GROK1_314B
+from repro.configs.mamba2_130m import CONFIG as MAMBA2_130M
+from repro.configs.granite_34b import CONFIG as GRANITE_34B
+
+ARCHITECTURES: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        PIXTRAL_12B,
+        LLAMA3_8B,
+        JAMBA_V01_52B,
+        DEEPSEEK_V2_236B,
+        SEAMLESS_M4T_LARGE_V2,
+        QWEN3_32B,
+        STARCODER2_3B,
+        GROK1_314B,
+        MAMBA2_130M,
+        GRANITE_34B,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return ARCHITECTURES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown architecture {name!r}; options: {sorted(ARCHITECTURES)}"
+        ) from None
+
+
+__all__ = [
+    "ARCHITECTURES",
+    "ModelConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "SSMConfig",
+    "InputShape",
+    "SHAPES",
+    "get_config",
+    "get_shape",
+]

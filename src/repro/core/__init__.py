@@ -1,0 +1,10 @@
+from repro.core.profiler import ProfileStore, RequestRecord
+from repro.core.simulator import Cluster, ScenarioConfig, local_reference, run_scenario
+from repro.core.transport import PAPER_A2, TPU_V5E, Transport, TransportProfile
+from repro.core.workloads import TABLE_II, Workload, llm_workload
+
+__all__ = [
+    "Cluster", "ScenarioConfig", "run_scenario", "local_reference",
+    "Transport", "TransportProfile", "PAPER_A2", "TPU_V5E",
+    "ProfileStore", "RequestRecord", "TABLE_II", "Workload", "llm_workload",
+]

@@ -1,0 +1,47 @@
+"""Aggregation helpers for the profiler (Table I metrics)."""
+
+from __future__ import annotations
+
+import math
+
+
+def mean(xs):
+    xs = list(xs)
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+def std(xs):
+    xs = list(xs)
+    if len(xs) < 2:
+        return 0.0
+    m = mean(xs)
+    return math.sqrt(sum((x - m) ** 2 for x in xs) / (len(xs) - 1))
+
+
+def cov(xs):
+    """Coefficient of variation sigma/mu (paper Fig. 15c)."""
+    m = mean(xs)
+    return std(xs) / m if m else 0.0
+
+
+def percentile(xs, p: float):
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    k = (len(xs) - 1) * p
+    lo = int(math.floor(k))
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (k - lo)
+
+
+def summarize(xs) -> dict:
+    xs = list(xs)
+    return {
+        "mean": mean(xs),
+        "p50": percentile(xs, 0.50),
+        "p95": percentile(xs, 0.95),
+        "p99": percentile(xs, 0.99),
+        "std": std(xs),
+        "cov": cov(xs),
+        "n": len(xs),
+    }

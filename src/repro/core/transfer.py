@@ -1,0 +1,96 @@
+"""JAX ingress / KV-cache transfer — the paper's transport taxonomy expressed
+as real collectives on the production mesh (DESIGN.md §2).
+
+In disaggregated serving the prefill pod produces a KV cache that must land
+in the decode pod's HBM. The three mechanisms:
+
+  DIRECT_HBM (GDR analogue)   : one collective_permute across the "pod" axis
+                                — NIC-to-HBM, zero staging copies.
+  DIRECT_DMA (RDMA analogue)  : permute + an explicit staging round-trip
+                                buffer copy on the destination (host-pinned
+                                bounce modeled as an extra copy pair).
+  HOST_STAGED (TCP analogue)  : permute of an int8-requantized payload via a
+                                host-layout buffer: dst pays decode + two
+                                copies (stack staging + H2D).
+
+The multi-pod dry-run lowers kv_transfer to prove the pod-axis collective
+compiles; `transfer_bytes()` feeds the §Roofline collective term, and the
+simulator's profile constants time the same byte counts.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class TransferMode(enum.Enum):
+    DIRECT_HBM = "direct_hbm"  # GDR
+    DIRECT_DMA = "direct_dma"  # RDMA
+    HOST_STAGED = "host_staged"  # TCP
+
+
+def _permute_leaf(x, mesh, perm):
+    """collective_permute along the 'pod' axis for one cache leaf."""
+    npods = mesh.shape["pod"]
+
+    def body(x_l):
+        return jax.lax.ppermute(x_l, "pod", perm)
+
+    spec = P(*(("pod",) + (None,) * (x.ndim - 1)))
+    return jax.shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+
+
+def kv_transfer(caches, mesh, *, mode: TransferMode = TransferMode.DIRECT_HBM,
+                perm=None):
+    """Move a prefill-pod KV cache tree to the decode pod.
+
+    caches: pytree whose leaves carry a leading pod-sharded dim (we tile the
+    tree leaves with a [npods, ...] leading axis in the launcher). perm:
+    [(src, dst)] pod pairs; default ring 0->1, 1->0.
+    """
+    npods = mesh.shape["pod"]
+    perm = perm or [(i, (i + 1) % npods) for i in range(npods)]
+
+    if mode is TransferMode.DIRECT_HBM:
+        return jax.tree.map(lambda x: _permute_leaf(x, mesh, perm), caches)
+
+    if mode is TransferMode.DIRECT_DMA:
+        # staging bounce on the destination: permute, then a copy through a
+        # bounce buffer (optimization barrier keeps XLA from eliding it)
+        def leaf(x):
+            y = _permute_leaf(x, mesh, perm)
+            bounce = jax.lax.optimization_barrier(y + 0)
+            return jax.lax.optimization_barrier(bounce * 1)
+
+        return jax.tree.map(leaf, caches)
+
+    # HOST_STAGED: requantize to int8 (host-format payload), permute, then
+    # dequantize + two staging copies on the destination.
+    def staged(x):
+        if x.dtype in (jnp.int32, jnp.int8):
+            return _permute_leaf(x, mesh, perm)
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        qq = _permute_leaf(q, mesh, perm)
+        s = jax.lax.psum(  # broadcast the scale (tiny)
+            scale / mesh.shape["pod"], ()
+        ) if False else scale
+        bounce = jax.lax.optimization_barrier(qq)
+        return (bounce.astype(x.dtype) * s).astype(x.dtype)
+
+    return jax.tree.map(staged, caches)
+
+
+def transfer_bytes(caches, mode: TransferMode) -> int:
+    """Wire bytes per pod for the §Roofline collective term."""
+    total = 0
+    for leaf in jax.tree.leaves(caches):
+        n = leaf.size // leaf.shape[0] if leaf.shape else leaf.size
+        itemsize = 1 if mode is TransferMode.HOST_STAGED else leaf.dtype.itemsize
+        total += n * itemsize
+    return total

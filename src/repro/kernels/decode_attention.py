@@ -1,0 +1,107 @@
+"""Single-token decode attention against a (ring) KV cache — Pallas TPU.
+
+The serving critical path (paper §IV: inference-time dominates decode).
+Grid: (B, Hkv, n_kv_blocks) with the KV sweep innermost; each step streams a
+KV tile HBM->VMEM and updates online-softmax statistics for the whole GQA
+group (G q-heads per KV head) at once, so the cache is read EXACTLY once —
+the kernel is purely HBM-bandwidth-bound, which is the roofline optimum for
+decode. valid_len masking supports ragged ring buffers.
+
+Layout: q [B, Hkv, G, hd]; k,v [B, Hkv, W, hd] (ops.py transposes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, bk, n_kv, w_real,
+):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid_len = len_ref[b]
+    k_start = ik * bk
+
+    @pl.when(k_start < valid_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, hd]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, hd]
+        v = v_ref[0, 0]  # [bk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [G, bk]
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kpos < valid_len) & (kpos < w_real)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_bhgd(
+    q, k, v, lengths, *, scale=None, block_k=512, interpret=False, w_real=None,
+):
+    """q: [B,Hkv,G,hd]; k,v: [B,Hkv,W,hd]; lengths: [B] int32 valid slots.
+
+    w_real: pre-padding cache capacity (mask out the pad region).
+    """
+    B, Hkv, G, hd = q.shape
+    W = k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    bk = min(block_k, W)
+    n_kv = pl.cdiv(W, bk)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, bk=bk, n_kv=n_kv,
+        w_real=w_real if w_real is not None else W,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, lens: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, lens: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -1,0 +1,134 @@
+"""Blocked flash attention (prefill) — Pallas TPU kernel.
+
+TPU-native design (DESIGN.md §6): the grid is (B, H, n_q, n_kv) with the KV
+dimension innermost/sequential; online-softmax statistics (m, l) and the
+output accumulator live in VMEM scratch that persists across the KV sweep.
+Q/K tiles are MXU-aligned (block sizes multiples of 128 where the inputs
+allow). Causal and sliding-window masking skip fully-masked KV blocks via
+pl.when, so the kernel does ~half the naive FLOPs on causal prefill.
+
+Layout: [B, H, S, hd] (the ops.py wrapper transposes from the model's
+[B, S, H, hd]). GQA: KV-head index = q-head // G via the BlockSpec index map —
+no KV expansion is materialized (unlike the XLA fallback path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, causal, window, bq, bk, n_kv, sq_real, skv_real,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # block-level reachability (skip fully masked KV blocks)
+    reachable = True
+    if causal:
+        reachable = k_start <= q_start + bq - 1
+    if window > 0:
+        reachable = jnp.logical_and(
+            reachable, k_start + bk - 1 > q_start - window
+        )
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, hd]
+        v = v_ref[0, 0]  # [bk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = (kpos < skv_real) & (qpos < sq_real)
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q, k, v, *, causal=True, window=0, scale=None,
+    block_q=128, block_k=128, interpret=False, sq_real=None, skv_real=None,
+):
+    """q: [B,H,Sq,hd]; k,v: [B,Hkv,Skv,hd] — padded to block multiples by ops.
+
+    sq_real/skv_real: pre-padding lengths (mask out the pad region).
+    """
+    B, H, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    n_q = pl.cdiv(Sq, bq)
+    n_kv = pl.cdiv(Skv, bk)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, n_kv=n_kv,
+        sq_real=sq_real if sq_real is not None else Sq,
+        skv_real=skv_real if skv_real is not None else Skv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((bq,), jnp.float32),
+            _vmem((bq,), jnp.float32),
+            _vmem((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

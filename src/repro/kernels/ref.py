@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (tests sweep
+shapes/dtypes with interpret=True). They are intentionally naive — clarity
+over speed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------- #
+# preprocess: dequantize uint8 features + normalize (the paper's
+# "preprocessing" serving stage — mean/std image-style normalization)
+# --------------------------------------------------------------------------- #
+def preprocess_ref(x_u8, mean, std, out_dtype=jnp.bfloat16):
+    """x_u8: [N, D] uint8; mean/std: [D] fp32. -> [N, D] out_dtype."""
+    x = x_u8.astype(jnp.float32) / 255.0
+    return ((x - mean) / std).astype(out_dtype)
+
+
+# --------------------------------------------------------------------------- #
+# rmsnorm
+# --------------------------------------------------------------------------- #
+def rmsnorm_ref(x, w, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention (prefill): causal + optional sliding window, GQA
+# --------------------------------------------------------------------------- #
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,Hkv,hd]."""
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    kx = jnp.repeat(k, G, axis=2)
+    vx = jnp.repeat(v, G, axis=2)
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, kx, preferred_element_type=jnp.float32
+    ) * scale
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= ki > qi - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), vx)
+
+
+# --------------------------------------------------------------------------- #
+# decode attention: one token vs ring cache, GQA
+# --------------------------------------------------------------------------- #
+def decode_attention_ref(q, k, v, valid_len=None, scale=None):
+    """q: [B,1,H,hd]; k,v: [B,W,Hkv,hd]; valid_len: [B] or None."""
+    B, _, H, hd = q.shape
+    W, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    kx = jnp.repeat(k, G, axis=2)
+    vx = jnp.repeat(v, G, axis=2)
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, kx, preferred_element_type=jnp.float32
+    ) * scale  # [B,H,1,W]
+    if valid_len is not None:
+        valid = jnp.arange(W)[None, None, None, :] < valid_len[:, None, None, None]
+        scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), vx)
+
+
+# --------------------------------------------------------------------------- #
+# SSD (mamba2): naive sequential recurrence — the definitional oracle
+# --------------------------------------------------------------------------- #
+def ssd_scan_ref(x, dt, A, B, C, initial_state=None):
+    """x: [b,S,nh,hd]; dt: [b,S,nh]; A: [nh]; B,C: [b,S,1,ds].
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t
+    Returns (y [b,S,nh,hd], final_state [b,nh,hd,ds]).
+    """
+    b, S, nh, hd = x.shape
+    ds = B.shape[-1]
+    state = (
+        jnp.zeros((b, nh, hd, ds), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # [b,nh,hd], [b,nh], [b,1,ds], [b,1,ds]
+        dA = jnp.exp(dtt * A[None, :])  # [b,nh]
+        Bx = jnp.einsum("bs,bhd->bhds", Bt[:, 0, :], (xt * dtt[..., None]))
+        state = state * dA[:, :, None, None] + Bx
+        y = jnp.einsum("bhds,bs->bhd", state, Ct[:, 0, :])
+        return state, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state

@@ -1,0 +1,271 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+This proves the distribution config is coherent without real hardware:
+``.lower().compile()`` with ShapeDtypeStruct stand-ins allocates nothing but
+runs the full GSPMD partitioner, so sharding mismatches, non-divisible
+dimensions, OOM-at-compile and unsupported collectives all surface here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # single pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multipod # 512 chips
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import ARCHITECTURES, SHAPES, get_config, get_shape
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.sharding.partition import ShardCtx, make_rules
+from repro.training.optimizer import adamw_init_specs
+from repro.training.steps import make_prefill_step, make_serve_step, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+# long_500k policy (DESIGN.md §4): SSM/hybrid run natively; dense/moe/vlm run
+# the sliding-window decode variant; enc-dec audio skips.
+LONG_WINDOW = 16_384
+
+
+def reduced_depth_cfg(cfg, k: int):
+    """Variant with every scanned layer-group at count=k (cost measurement).
+
+    XLA's cost_analysis counts a scan body ONCE regardless of trip count, so
+    the dry-run compiles unrolled k=1 and k=2 variants; their difference is
+    the exact per-superblock cost, which we extrapolate to the real depth.
+    """
+    from repro.models.transformer import layer_groups
+
+    groups = layer_groups(cfg)
+    n = sum(len(g.sigs) * (k if g.count > 1 else g.count) for g in groups)
+    changes = {"n_layers": n}
+    if cfg.encoder_layers > 1:
+        changes["encoder_layers"] = k
+    return dataclasses.replace(cfg, **changes)
+
+
+def scan_delta(cfg) -> int:
+    """(count - 1) shared by all scanned groups (asserted equal)."""
+    from repro.models.transformer import layer_groups
+
+    deltas = {g.count - 1 for g in layer_groups(cfg) if g.count > 1}
+    if cfg.encoder_layers > 1:
+        deltas.add(cfg.encoder_layers - 1)
+    assert len(deltas) <= 1, f"unequal scanned group counts: {deltas}"
+    return deltas.pop() if deltas else 0
+
+
+def arch_for_shape(cfg, shape):
+    """Returns (config, skip_reason)."""
+    if shape.name != "long_500k":
+        return cfg, None
+    if cfg.is_encdec:
+        return None, "enc-dec: 500k-token decode target is meaningless (DESIGN.md §4)"
+    if cfg.family in ("ssm", "hybrid"):
+        return cfg, None  # sub-quadratic natively
+    # dense/moe/vlm: sliding-window variant
+    return dataclasses.replace(cfg, sliding_window=LONG_WINDOW), None
+
+
+def shardings_for(model, ctx: ShardCtx, shape):
+    mesh = ctx.mesh
+    ns = lambda tree: jax.tree.map(lambda p: NamedSharding(mesh, p), tree)
+    param_ps = ns(model.param_pspecs(ctx.rules))
+    batch_axes = ctx.rules.get("batch")
+
+    def data_spec(ndim, batch_dim=0):
+        from jax.sharding import PartitionSpec as P
+
+        parts = [None] * ndim
+        parts[batch_dim] = batch_axes
+        return NamedSharding(mesh, P(*parts))
+
+    return param_ps, data_spec
+
+
+def build_case(arch: str, shape_name: str, *, multi_pod: bool, mesh=None,
+               cfg_override=None, unroll: bool = False, rule_overrides=None,
+               remat_policy: str = "full"):
+    """Returns (lowered, model, cfg, shape, ctx, step_name) or (None, reason)."""
+    cfg0 = cfg_override if cfg_override is not None else get_config(arch)
+    shape = get_shape(shape_name)
+    cfg, skip = arch_for_shape(cfg0, shape)
+    if cfg is None:
+        return None, skip
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(cfg, mesh, shape, rule_overrides)
+    ctx = ShardCtx(mesh=mesh, rules=rules)
+    model = Model(cfg, remat=(shape.kind == "train"), unroll=unroll,
+                  remat_policy=remat_policy)
+
+    param_ps, data_spec = shardings_for(model, ctx, shape)
+    pspecs = model.param_specs()
+    in_specs = model.input_specs(shape)
+
+    from jax.sharding import PartitionSpec as P
+
+    scalar_ps = NamedSharding(mesh, P())
+
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(model, shard_ctx=ctx)
+            opt_specs = adamw_init_specs(pspecs)
+            opt_ps = type(opt_specs)(
+                step=scalar_ps,
+                m=jax.tree.map(lambda p: p, param_ps),
+                v=jax.tree.map(lambda p: p, param_ps),
+            )
+            batch_ps = jax.tree.map(lambda s: data_spec(len(s.shape)), in_specs)
+            # explicit out_shardings so donated params/opt actually alias
+            metrics_ps = {"loss": scalar_ps, "grad_norm": scalar_ps}
+            fn = jax.jit(
+                step,
+                in_shardings=(param_ps, opt_ps, batch_ps),
+                out_shardings=(param_ps, opt_ps, metrics_ps),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(pspecs, opt_specs, in_specs)
+            return (lowered, model, cfg, shape, ctx, "train"), None
+
+        if shape.kind == "prefill":
+            step = make_prefill_step(model, shard_ctx=ctx)
+            batch_ps = jax.tree.map(lambda s: data_spec(len(s.shape)), in_specs)
+            fn = jax.jit(step, in_shardings=(param_ps, batch_ps))
+            lowered = fn.lower(pspecs, in_specs)
+            return (lowered, model, cfg, shape, ctx, "prefill"), None
+
+        # decode
+        step = make_serve_step(model, shard_ctx=ctx)
+        cache_ps = jax.tree.map(
+            lambda p: NamedSharding(mesh, p), model.cache_pspecs(ctx.rules)
+        )
+        tok_ps = data_spec(2)
+        len_ps = data_spec(1)
+        vocab_ax = ctx.rules.get("vocab")
+        logits_ps = NamedSharding(mesh, P(ctx.rules.get("batch"), vocab_ax))
+        fn = jax.jit(
+            step,
+            in_shardings=(param_ps, cache_ps, tok_ps, len_ps),
+            out_shardings=(logits_ps, cache_ps, len_ps),
+            donate_argnums=(1,),
+        )
+        lowered = fn.lower(
+            pspecs, in_specs["caches"], in_specs["tokens"], in_specs["lengths"]
+        )
+        return (lowered, model, cfg, shape, ctx, "serve"), None
+
+
+def _cost_triple(compiled):
+    """(flops, bytes, collective_bytes) from one compiled executable."""
+    ca = compiled.cost_analysis()
+    coll = rl.collective_bytes(compiled.as_text())
+    total = sum(v for k, v in coll.items() if not k.endswith("_count"))
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)), float(total), coll
+
+
+def run_case(arch, shape_name, *, multi_pod, save=True, verbose=True, mesh=None,
+             rule_overrides=None, tag="", correct_scan: bool = True):
+    """Full-depth compile (validation + memory) plus k=1/k=2 unrolled variant
+    compiles whose difference corrects XLA's scan-body-counted-once costs."""
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    built, skip = build_case(
+        arch, shape_name, multi_pod=multi_pod, mesh=mesh,
+        rule_overrides=rule_overrides,
+    )
+    if built is None:
+        if verbose:
+            print(f"SKIP  {arch:24s} {shape_name:12s} {mesh_name:9s} — {skip}")
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name, "skip": skip}
+    lowered, model, cfg, shape, ctx, step_name = built
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    hlo = compiled.as_text()
+    chips = 512 if multi_pod else 256
+    r = rl.analyze(
+        compiled, hlo, cfg=cfg, shape=shape, mesh_name=mesh_name,
+        step=step_name, chips=chips,
+    )
+
+    # --- scan-count correction via unrolled depth variants ----------------- #
+    delta = scan_delta(cfg) if correct_scan else 0
+    if delta > 0:
+        cfg0 = get_config(arch)
+        variants = []
+        for k in (1, 2):
+            b, _ = build_case(
+                arch, shape_name, multi_pod=multi_pod, mesh=ctx.mesh,
+                cfg_override=reduced_depth_cfg(cfg0, k), unroll=True,
+                rule_overrides=rule_overrides,
+            )
+            variants.append(_cost_triple(b[0].compile()))
+        (fa, ba, ca_, cla), (fb, bb, cb, clb) = variants
+        r.hlo_flops = fa + (fb - fa) * delta
+        r.hlo_bytes = ba + (bb - ba) * delta
+        r.coll_bytes = ca_ + (cb - ca_) * delta
+        r.coll_breakdown = {
+            k: max(0, cla.get(k, 0) + (clb.get(k, 0) - cla.get(k, 0)) * delta)
+            for k in set(cla) | set(clb)
+        }
+
+    if verbose:
+        print(f"OK    {rl.format_row(r)}  (compile {t_compile:.1f}s)")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        out = os.path.join(
+            RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+        )
+        rl.save(r, out)
+    return r.to_dict()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the scan-correction variant compiles "
+                         "(compile-success proof only)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHITECTURES)
+    if not args.arch:  # heaviest GSPMD case last so partial runs cover more
+        archs = [a for a in archs if a != "deepseek-v2-236b"] + ["deepseek-v2-236b"]
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    if not args.all and not args.arch:
+        ap.error("pass --arch/--shape or --all")
+
+    failures = []
+    for a in archs:
+        for s in shapes:
+            try:
+                run_case(a, s, multi_pod=args.multipod, save=not args.no_save,
+                         correct_scan=not args.fast)
+            except Exception as e:
+                failures.append((a, s, repr(e)))
+                print(f"FAIL  {a:24s} {s:12s} — {type(e).__name__}: {e}")
+                traceback.print_exc(limit=4)
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production meshes. v5e pod = 16x16 = 256 chips; multi-pod = 2 pods.
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before the first jax call).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh():
+    """Single-device mesh with the same axis names (CPU tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,186 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+``cost_analysis`` on an SPMD-partitioned executable reports PER-DEVICE
+flops/bytes (verified empirically), so no further division by chip count is
+needed. collective_bytes is parsed from the compiled HLO text: we sum the
+wire bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, using standard ring-algorithm byte counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|[su]\d+|bf16|f16|f32|f64|c64|c128)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind wire bytes (per device), ring-algorithm model:
+
+      all-gather:        result*(n-1)/n   ~ result bytes sent+recv per dev
+      all-reduce:        2*size*(n-1)/n   ~ 2x operand bytes
+      reduce-scatter:    input*(n-1)/n    ~ input bytes
+      all-to-all:        size*(n-1)/n     ~ size bytes
+      collective-permute: size            (point to point)
+
+    We use the simple upper-bound factors (dropping (n-1)/n) for stability;
+    what matters for the roofline comparison is relative magnitude.
+    """
+    out: dict = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        result_types, kind = m.group(1), m.group(2)
+        # -done ops repeat the -start shape; count each pair once
+        if "-done(" in line:
+            continue
+        rb = _shape_bytes(result_types)
+        if kind == "all-reduce":
+            wire = 2 * rb
+        elif kind == "reduce-scatter":
+            # result is the scattered shard; input ~ result * group size
+            wire = rb  # conservative: shard in+out
+        else:
+            wire = rb
+        out[kind] = out.get(kind, 0) + wire
+        out.setdefault(f"{kind}_count", 0)
+        out[f"{kind}_count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    step: str
+    chips: int
+    hlo_flops: float  # per device
+    hlo_bytes: float  # per device
+    coll_bytes: float  # per device
+    coll_breakdown: dict
+    model_flops: float  # 6*N*D useful flops, global
+    peak_bytes_per_device: int
+    arg_bytes_per_device: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            t_compute=self.t_compute,
+            t_memory=self.t_memory,
+            t_collective=self.t_collective,
+            bottleneck=self.bottleneck,
+            useful_flops_fraction=self.useful_flops_fraction,
+        )
+        return d
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D for training; 2*N*D per generated/processed token for serving."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def analyze(compiled, hlo_text, *, cfg, shape, mesh_name, step, chips) -> Roofline:
+    ca = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    coll = collective_bytes(hlo_text)
+    coll_total = sum(v for k, v in coll.items() if not k.endswith("_count"))
+    peak = (
+        mem.argument_size_in_bytes
+        + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+    return Roofline(
+        arch=cfg.name,
+        shape=shape.name,
+        mesh=mesh_name,
+        step=step,
+        chips=chips,
+        hlo_flops=float(ca.get("flops", 0.0)),
+        hlo_bytes=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=float(coll_total),
+        coll_breakdown=coll,
+        model_flops=model_flops(cfg, shape),
+        peak_bytes_per_device=int(peak),
+        arg_bytes_per_device=int(mem.argument_size_in_bytes),
+    )
+
+
+def format_row(r: Roofline) -> str:
+    return (
+        f"{r.arch:24s} {r.shape:12s} {r.mesh:9s} {r.step:8s} "
+        f"t_comp={r.t_compute*1e3:9.3f}ms t_mem={r.t_memory*1e3:9.3f}ms "
+        f"t_coll={r.t_collective*1e3:9.3f}ms bound={r.bottleneck:10s} "
+        f"useful={r.useful_flops_fraction*100:5.1f}% "
+        f"peak_dev={r.peak_bytes_per_device/2**30:6.2f}GiB"
+    )
+
+
+def save(r: Roofline, path):
+    with open(path, "w") as f:
+        json.dump(r.to_dict(), f, indent=1, default=float)

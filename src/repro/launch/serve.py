@@ -1,0 +1,64 @@
+"""Serving launcher: continuous-batching engine + closed-loop load.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+      --transport gdr --clients 4
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core.transport import PROFILES, Transport
+from repro.models import Model
+from repro.serving import ClosedLoopClient, Gateway, ServingEngine, run_closed_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--transport", default="gdr",
+                    choices=["local", "tcp", "rdma", "gdr"])
+    ap.add_argument("--first-hop", default="",
+                    choices=["", "tcp", "rdma"], help="proxied connection")
+    ap.add_argument("--profile", default="paper_a2", choices=sorted(PROFILES))
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServingEngine(
+        model, params, max_batch=args.max_batch,
+        max_seq=args.prompt_len + args.new_tokens + 8,
+        transport=Transport(args.transport), profile=PROFILES[args.profile],
+    )
+    front = engine
+    if args.first_hop:
+        front = Gateway(engine, first_hop=Transport(args.first_hop),
+                        profile=PROFILES[args.profile])
+    clients = [
+        ClosedLoopClient(i, cfg.vocab_size, prompt_len=args.prompt_len,
+                         max_new_tokens=args.new_tokens)
+        for i in range(args.clients)
+    ]
+    run_closed_loop(front, clients, requests_per_client=args.requests)
+    s = engine.store
+    print(f"{cfg.name} via {args.transport}"
+          + (f" (proxied {args.first_hop})" if args.first_hop else ""))
+    print("  requests:", len(s.records))
+    print("  mean total: %.2f ms  p99: %.2f ms"
+          % (s.summary()["mean"] * 1e3, s.summary()["p99"] * 1e3))
+    print("  stage means (ms):",
+          {k: round(v * 1e3, 3) for k, v in s.stage_means().items() if v})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Distributed training launcher.
+
+On the production mesh this drives the same train_step the dry-run compiles;
+on this CPU container use --reduced for a runnable demonstration.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced --steps 50
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_shape
+from repro.models import Model
+from repro.training import AdamWConfig, DataConfig, TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config on local devices (CPU demo)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--remat-policy", default="full",
+                    choices=["full", "dots", "none"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        batch, seq = args.batch, args.seq
+        shard_ctx = None
+    else:
+        from repro.launch.mesh import make_production_mesh
+        from repro.sharding.partition import make_ctx
+
+        shape = get_shape(args.shape)
+        mesh = make_production_mesh()
+        shard_ctx = make_ctx(cfg, mesh, shape)
+        batch, seq = shape.global_batch, shape.seq_len
+
+    model = Model(cfg, remat=True, remat_policy=args.remat_policy)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"batch={batch} seq={seq} on {len(jax.devices())} device(s)")
+    train(
+        model,
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=seq, batch_size=batch),
+        TrainConfig(steps=args.steps, log_every=max(args.steps // 10, 1),
+                    ckpt_every=args.steps // 2 if args.ckpt_dir else 0,
+                    ckpt_dir=args.ckpt_dir or "checkpoints"),
+        AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                    total_steps=args.steps),
+        shard_ctx=shard_ctx,
+    )
+
+
+if __name__ == "__main__":
+    main()

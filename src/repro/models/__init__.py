@@ -1,0 +1,3 @@
+from repro.models.model import FRONTEND_DIM, Model
+
+__all__ = ["Model", "FRONTEND_DIM"]

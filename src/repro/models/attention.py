@@ -1,0 +1,253 @@
+"""GQA attention: chunked prefill (memory-bounded), ring-buffer decode, and
+flash-decoding across chips for sequence-sharded KV caches.
+
+The pure-jnp paths here are the reference/dry-run implementation; the Pallas
+kernels in ``repro.kernels`` implement the same math for TPU and are verified
+against these in tests.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import apply_rope, rmsnorm
+from repro.models.schema import ParamSpec
+
+NEG_INF = -1e30
+
+
+def attn_schema(cfg) -> dict:
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": ParamSpec((d, h * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, hk * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, hk * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+        s["k_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+    return s
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def project_qkv(p, cfg, x, positions):
+    """x: [B,S,d] -> q [B,S,H,hd], k/v [B,S,Hkv,hd] with qk-norm + RoPE."""
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------- #
+# Prefill / training attention: chunked over query blocks.
+# --------------------------------------------------------------------------- #
+def expand_kv(k, G: int, shard_ctx=None):
+    """Megatron-style GQA under TP: repeat each KV head G times so the head
+    dim matches q and STAYS shardable over "model" (Hkv=8 cannot shard over
+    model=16; H=32 can). Each shard only materializes its own heads' copies.
+    """
+    if G == 1:
+        return k
+    k = jnp.repeat(k, G, axis=2)
+    if shard_ctx is not None:
+        k = shard_ctx.constrain(k, "batch", None, "heads", None)
+    return k
+
+
+def chunked_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    scale: Optional[float] = None,
+    shard_ctx=None,
+):
+    """Memory-bounded attention: O(q_chunk * S_kv) live scores.
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, Hkv, hd]. GQA via KV-head expansion
+    (see expand_kv). ``window`` > 0 restricts attention to the trailing
+    ``window`` positions (sliding-window variant for long-context dense).
+    """
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    hd_v = v.shape[-1]  # may differ from hd (MLA: qk_dim != v_head_dim)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    k = expand_kv(k, G, shard_ctx)
+    v = expand_kv(v, G, shard_ctx)
+    if shard_ctx is not None:
+        q = shard_ctx.constrain(q, "batch", None, "heads", None)
+
+    q_chunk = min(q_chunk, Sq)
+    n_chunks = max(1, math.ceil(Sq / q_chunk))
+    pad = n_chunks * q_chunk - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc_all = q.reshape(B, n_chunks, q_chunk, H, hd)
+    kv_idx = jnp.arange(k.shape[1])
+
+    def one_chunk(ci):
+        qc = qc_all[:, ci]  # [B, Cq, H, hd]
+        scores = (
+            jnp.einsum("bqhd,bkhd->bhqk", qc, k, preferred_element_type=jnp.float32)
+            * scale
+        )
+        q_idx = ci * q_chunk + jnp.arange(q_chunk)
+        mask = jnp.ones((q_chunk, k.shape[1]), bool)
+        if causal:
+            mask &= q_idx[:, None] >= kv_idx[None, :]
+        if window > 0:
+            mask &= kv_idx[None, :] > q_idx[:, None] - window
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+        return out  # [B, Cq, H, hd_v]
+
+    if n_chunks == 1:
+        out = one_chunk(0)[:, None]
+    else:
+        # checkpoint the chunk body: backward-of-while otherwise STACKS every
+        # chunk's [B,H,Cq,Skv] scores/probs residuals (n_chunks x GB).
+        out = jax.lax.map(jax.checkpoint(one_chunk), jnp.arange(n_chunks))
+        out = jnp.moveaxis(out, 0, 1)  # [B,n,Cq,H,hd_v]
+    out = out.reshape(B, n_chunks * q_chunk, H, hd_v)
+    if pad:
+        out = out[:, :Sq]
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Decode attention: one new token against a ring-buffer KV cache.
+# --------------------------------------------------------------------------- #
+def _partial_decode(q, k, v, valid, scale):
+    """q: [B,1,H,hd]; k,v: [B,W,Hkv,hd]; valid: [B,W] bool.
+
+    Returns partial-softmax triple (out [B,1,H,hd], m [B,1,H,1], l [B,1,H,1])
+    so sequence shards can be merged flash-decoding style.
+    """
+    B, _, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, 1, Hkv, G, hd)
+    scores = (
+        jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+        * scale
+    )  # [B,Hkv,G,1,W]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)  # [B,Hkv,G,1]
+    e = jnp.exp(scores - m[..., None])
+    e = jnp.where(valid[:, None, None, None, :], e, 0.0)
+    l = jnp.sum(e, axis=-1)  # [B,Hkv,G,1]
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", e.astype(v.dtype), v)
+    out = out.reshape(B, 1, H, hd)
+    m = m[..., 0].reshape(B, 1, H, 1)
+    l = l[..., 0].reshape(B, 1, H, 1)
+    return out, m, l
+
+
+def decode_attention(q, k, v, *, valid_len=None, shard_ctx=None, scale=None):
+    """Single-token attention over a fully-materialized (local) cache."""
+    B, _, H, hd = q.shape
+    W = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if valid_len is None:
+        valid = jnp.ones((B, W), bool)
+    else:
+        valid = jnp.arange(W)[None, :] < valid_len[:, None]
+    out, _, l = _partial_decode(q, k, v, valid, scale)
+    return (out / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def _shard_index(mesh, axes_t):
+    shard = jax.lax.axis_index(axes_t[0])
+    for a in axes_t[1:]:
+        shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+    return shard
+
+
+def _local_ring_write(cache_l, new, lengths, start, W_l, W_total):
+    """Write new [B,1,...] into this shard's slice of the ring buffer.
+
+    A masked select (not scatter): XLA SPMD turns a scatter onto a
+    seq-sharded operand into a full replication of the cache, so each shard
+    instead selects between its cache and the (broadcast) new entry.
+    """
+    slot = lengths % W_total  # [B] global ring slot
+    idx = slot - start  # local slot (may be out of this shard's range)
+    onehot = jnp.arange(W_l)[None, :] == idx[:, None]  # [B, W_l]
+    extra = (1,) * (cache_l.ndim - 2)
+    oh = onehot.reshape(onehot.shape + extra)
+    return jnp.where(oh, new.astype(cache_l.dtype), cache_l)
+
+
+def decode_attention_update(q, k_new, v_new, k_cache, v_cache, lengths, *,
+                            valid_len=None, shard_ctx=None, scale=None):
+    """Fused ring-write + flash-decoding attention.
+
+    q, k_new, v_new: [B,1,H/Hkv,hd]; caches: [B,W,Hkv,hd]; lengths: [B].
+    Returns (out [B,1,H,hd], k_cache', v_cache').
+
+    When the cache is sequence-sharded (shard_ctx.kv_seq_axes), BOTH the
+    ring write and the partial-softmax attention run inside one shard_map —
+    the cache never crosses shards and is updated in place.
+    """
+    B, _, H, hd = q.shape
+    W = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    if shard_ctx is None or shard_ctx.kv_seq_axes is None:
+        from repro.models import kvcache as kvc
+
+        k_cache = kvc.ring_write(k_cache, k_new, lengths)
+        v_cache = kvc.ring_write(v_cache, v_new, lengths)
+        out = decode_attention(
+            q, k_cache, v_cache, valid_len=valid_len, scale=scale
+        )
+        return out, k_cache, v_cache
+
+    axes = shard_ctx.kv_seq_axes
+    axes_t = axes if isinstance(axes, tuple) else (axes,)
+    mesh = shard_ctx.mesh
+    vlen = valid_len if valid_len is not None else jnp.full((B,), W, jnp.int32)
+
+    def local(q_l, kn_l, vn_l, kc_l, vc_l, lens_l, vl_l):
+        W_l = kc_l.shape[1]
+        start = _shard_index(mesh, axes_t) * W_l
+        kc_l = _local_ring_write(kc_l, kn_l, lens_l, start, W_l, W)
+        vc_l = _local_ring_write(vc_l, vn_l, lens_l, start, W_l, W)
+        slot = start + jnp.arange(W_l)
+        valid = slot[None, :] < vl_l[:, None]
+        out, m, l = _partial_decode(q_l, kc_l, vc_l, valid, scale)
+        m_g = jax.lax.pmax(m, axes)
+        corr = jnp.exp(m - m_g)
+        num = jax.lax.psum(out * corr, axes)
+        den = jax.lax.psum(l * corr, axes)
+        return (num / jnp.maximum(den, 1e-30)).astype(q_l.dtype), kc_l, vc_l
+
+    batch_ax = shard_ctx.rules.get("batch")
+    q_spec = P(batch_ax, None, None, None)
+    kv_spec = P(batch_ax, axes, None, None)
+    b_spec = P(batch_ax)
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(q_spec, q_spec, q_spec, kv_spec, kv_spec, b_spec, b_spec),
+        out_specs=(q_spec, kv_spec, kv_spec),
+    )(q, k_new, v_new, k_cache, v_cache, lengths, vlen)

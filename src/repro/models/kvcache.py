@@ -1,0 +1,127 @@
+"""KV / state caches as plain pytrees, with ring-buffer write semantics.
+
+Cache kinds per layer signature:
+  attn       -> {"k": [B,W,Hkv,hd], "v": [B,W,Hkv,hd]}
+  attn+cross -> + {"xk": [B,Senc,H,hd], "xv": [B,Senc,H,hd]} (static)
+  mla        -> {"ckv": [B,W,r], "krope": [B,W,rope]}
+  ssm        -> {"conv": [B,K-1,C], "state": [B,nh,hd,ds]}
+
+Ring semantics: slot = length % W. In steady-state decode (dry-run shapes)
+every slot is valid, which also models sliding-window caches exactly
+(W = window).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_write(cache_kv, new, lengths):
+    """cache_kv: [B, W, ...]; new: [B, 1, ...]; lengths: [B] int32."""
+    W = cache_kv.shape[1]
+    idx = (lengths % W).astype(jnp.int32)
+
+    def upd(c, n, i):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+
+    return jax.vmap(upd)(cache_kv, new.astype(cache_kv.dtype), idx)
+
+
+def attn_cache_shapes(cfg, B: int, W: int, enc_len: int = 0) -> dict:
+    if cfg.mla is not None:
+        m = cfg.mla
+        s = {"ckv": (B, W, m.kv_lora_rank), "krope": (B, W, m.qk_rope_dim)}
+    else:
+        s = {
+            "k": (B, W, cfg.n_kv_heads, cfg.head_dim),
+            "v": (B, W, cfg.n_kv_heads, cfg.head_dim),
+        }
+    if cfg.is_encdec and enc_len:
+        s["xk"] = (B, enc_len, cfg.n_kv_heads, cfg.head_dim)
+        s["xv"] = (B, enc_len, cfg.n_kv_heads, cfg.head_dim)
+    return s
+
+
+def ssm_cache_shapes(cfg, B: int) -> dict:
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    nh = s.n_heads(cfg.d_model)
+    conv_ch = d_in + 2 * s.d_state
+    return {
+        "conv": (B, s.d_conv - 1, conv_ch),
+        "state": (B, nh, s.head_dim, s.d_state),
+    }
+
+
+def layer_cache_shapes(cfg, sig, B: int, W: int, enc_len: int = 0) -> dict:
+    kind, _ = sig
+    if kind == "attn":
+        return attn_cache_shapes(cfg, B, W, enc_len)
+    return ssm_cache_shapes(cfg, B)
+
+
+_F32_KEYS = ("state",)  # SSM state carries fp32 for numerical stability
+
+
+def _dtype_for(key, dtype):
+    return jnp.float32 if key in _F32_KEYS else dtype
+
+
+def layer_cache_specs(cfg, sig, B, W, enc_len=0, dtype=jnp.bfloat16):
+    shapes = layer_cache_shapes(cfg, sig, B, W, enc_len)
+    return {k: jax.ShapeDtypeStruct(v, _dtype_for(k, dtype)) for k, v in shapes.items()}
+
+
+def init_layer_cache(cfg, sig, B, W, enc_len=0, dtype=jnp.bfloat16):
+    shapes = layer_cache_shapes(cfg, sig, B, W, enc_len)
+    return {k: jnp.zeros(v, _dtype_for(k, dtype)) for k, v in shapes.items()}
+
+
+_SEQ_KEYS = ("k", "v", "ckv", "krope")
+
+
+def grow_cache(caches, new_w: int):
+    """Pad the ring dimension of a prefill cache so decode can append.
+
+    Works on the full nested cache tree (grouped, possibly scan-stacked:
+    the seq dim is axis 1 for unstacked, axis 2 for stacked leaves).
+    """
+
+    def grow(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if key not in _SEQ_KEYS:
+            return leaf
+        axis = leaf.ndim - 3 if key in ("k", "v") else leaf.ndim - 2
+        w = leaf.shape[axis]
+        if w >= new_w:
+            return leaf
+        pad = [(0, 0)] * leaf.ndim
+        pad[axis] = (0, new_w - w)
+        return jnp.pad(leaf, pad)
+
+    return jax.tree_util.tree_map_with_path(grow, caches)
+
+
+def cache_logical_axes(cfg, sig, kv_seq_sharded: bool) -> dict:
+    """Logical axes per cache entry (mirrors layer_cache_shapes)."""
+    kind, _ = sig
+    seq_ax = "kv_seq" if kv_seq_sharded else "seq"
+    # when the cache seq dim is sharded over "model", heads must stay local
+    kvh = None if kv_seq_sharded else "kv_heads"
+    if kind == "attn":
+        if cfg.mla is not None:
+            ax = {"ckv": ("batch", seq_ax, None), "krope": ("batch", seq_ax, None)}
+        else:
+            ax = {
+                "k": ("batch", seq_ax, kvh, None),
+                "v": ("batch", seq_ax, kvh, None),
+            }
+        if cfg.is_encdec:
+            ax["xk"] = ("batch", None, "kv_heads", None)
+            ax["xv"] = ("batch", None, "kv_heads", None)
+        return ax
+    return {
+        "conv": ("batch", None, "ssm_in"),
+        "state": ("batch", "ssm_heads", None, None),
+    }

@@ -1,0 +1,202 @@
+"""Shared layer math: RMSNorm, RoPE, SwiGLU, vocab-parallel embedding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.schema import ParamSpec
+
+
+# --------------------------------------------------------------------------- #
+# RMSNorm
+# --------------------------------------------------------------------------- #
+def rmsnorm_schema(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dtype) * w
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# SwiGLU FFN
+# --------------------------------------------------------------------------- #
+def ffn_schema(d: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamSpec((d, d_ff), ("embed", "ffn")),
+        "w_up": ParamSpec((d, d_ff), ("embed", "ffn")),
+        "w_down": ParamSpec((d_ff, d), ("ffn", "embed")),
+    }
+
+
+def ffn_apply(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------- #
+# Vocab-parallel embedding (Megatron-style) + output head
+# --------------------------------------------------------------------------- #
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def embed_schema(vocab_padded: int, d: int) -> ParamSpec:
+    return ParamSpec((vocab_padded, d), ("vocab", "embed"), init="small_normal")
+
+
+def embed_lookup(table, tokens, shard_ctx=None):
+    """Gather rows of a (possibly vocab-sharded) embedding table.
+
+    With a sharding context, runs Megatron VocabParallelEmbedding inside
+    shard_map: each model-shard gathers its local vocab range (out-of-range
+    tokens produce zero) and the partials are summed with a single all-reduce
+    of the [tokens, d_model] activations — avoiding an all-gather of the
+    full table.
+    """
+    if shard_ctx is None or not shard_ctx.shards_vocab:
+        return jnp.take(table, tokens, axis=0)
+
+    mesh = shard_ctx.mesh
+    model_axis = shard_ctx.rules["vocab"]
+    tok_spec = shard_ctx.activation_pspec(tokens.ndim, batch_dim=0)
+
+    def local(table_shard, tok):
+        n_local = table_shard.shape[0]
+        start = jax.lax.axis_index(model_axis) * n_local
+        local_ids = tok - start
+        in_range = (local_ids >= 0) & (local_ids < n_local)
+        safe = jnp.where(in_range, local_ids, 0)
+        out = jnp.take(table_shard, safe, axis=0)
+        out = jnp.where(in_range[..., None], out, 0).astype(table_shard.dtype)
+        return jax.lax.psum(out, model_axis)
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(model_axis, None), tok_spec),
+        out_specs=P(*tuple(tok_spec) + (None,)),
+    )(table, tokens)
+
+
+def lm_head(table, x, true_vocab: int):
+    """Logits against the (tied, vocab-sharded) table; pad ids masked out."""
+    logits = x @ table.T.astype(x.dtype)  # [..., vocab_padded]
+    vp = table.shape[0]
+    if vp != true_vocab:
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(iota < true_vocab, logits, -1e9)
+    return logits
+
+
+import functools
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1,))
+def _pmax_sg(x, axis):
+    """pmax with a zero tangent — shard_map autodiff lacks a pmax rule, and
+    the softmax max-shift needs no gradient anyway."""
+    return jax.lax.pmax(x, axis)
+
+
+@_pmax_sg.defjvp
+def _pmax_sg_jvp(axis, primals, tangents):
+    (x,) = primals
+    out = jax.lax.pmax(x, axis)
+    return out, out * 0.0  # zero tangent with matching vma/type
+
+
+def vocab_parallel_nll(x, table, labels, shard_ctx, true_vocab: int,
+                       chunk: int = 1024):
+    """Fused LM-head + cross-entropy with the vocab sharded over "model".
+
+    Never materializes the full [B,S,V] logits: each model shard computes its
+    local-vocab logits chunk-by-chunk over the sequence (rematerialized in the
+    backward pass), and the softmax statistics are combined with pmax/psum —
+    Megatron vocab-parallel CE adapted to shard_map. Returns nll [B, S] fp32.
+    """
+    model_ax = shard_ctx.rules["vocab"]
+    batch_ax = shard_ctx.rules.get("batch")
+
+    def local(x_l, tab_l, lab_l):
+        B, S, _ = x_l.shape
+        vloc = tab_l.shape[0]
+        start = jax.lax.axis_index(model_ax) * vloc
+        iota = start + jnp.arange(vloc)
+
+        c = min(chunk, S)
+        n = S // c if S % c == 0 else -1
+        if n == -1:  # ragged: fall back to one chunk
+            c, n = S, 1
+        xc = x_l.reshape(B, n, c, -1)
+        lc = lab_l.reshape(B, n, c)
+
+        def body(_, inp):
+            xs, ls = inp  # [B,c,d], [B,c]
+            logits = (xs @ tab_l.T).astype(jnp.float32)
+            logits = jnp.where(iota < true_vocab, logits, -jnp.inf)
+            # max is for numerical stability only — no gradient needed
+            m = _pmax_sg(jnp.max(logits, axis=-1), model_ax)
+            se = jax.lax.psum(
+                jnp.sum(jnp.exp(logits - m[..., None]), axis=-1), model_ax
+            )
+            lse = jnp.log(se) + m
+            lid = ls - start
+            in_r = (lid >= 0) & (lid < vloc)
+            safe = jnp.clip(lid, 0, vloc - 1)
+            gold_l = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+            gold = jax.lax.psum(jnp.where(in_r, gold_l, 0.0), model_ax)
+            return 0.0, lse - gold
+
+        _, nll = jax.lax.scan(
+            jax.checkpoint(body), 0.0, (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0))
+        )
+        return jnp.moveaxis(nll, 0, 1).reshape(B, S)
+
+    return jax.shard_map(
+        local,
+        mesh=shard_ctx.mesh,
+        in_specs=(
+            P(batch_ax, None, None),
+            P(model_ax, None),
+            P(batch_ax, None),
+        ),
+        out_specs=P(batch_ax, None),
+    )(x, table, labels)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token NLL, fp32 accumulation, no full-softmax materialization."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

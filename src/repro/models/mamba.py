@@ -1,0 +1,217 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Forward uses the chunked SSD algorithm (intra-chunk dense attention-like MXU
+work + inter-chunk state recurrence). ``repro.kernels.ssd_scan`` implements
+the same chunk computation as a Pallas kernel; ``ssd_chunked`` here is the
+pure-jnp path used for dry-runs and as the kernel oracle's counterpart.
+The decode step is the O(1) state recurrence — the constant-size serving
+payload called out in DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+from repro.models.schema import ParamSpec
+
+
+def mamba_schema(cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = d * s.expand
+    nh = s.n_heads(d)
+    g = 1  # B/C groups
+    conv_ch = d_in + 2 * g * s.d_state
+    return {
+        "in_proj": ParamSpec(
+            (d, 2 * d_in + 2 * g * s.d_state + nh), ("embed", "ssm_in")
+        ),
+        "conv_w": ParamSpec((s.d_conv, conv_ch), ("conv", "ssm_in")),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_in",), init="zeros"),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "gate_norm": ParamSpec((d_in,), ("ssm_in",), init="ones"),
+        "out_proj": ParamSpec((d_in, d), ("ssm_in", "embed")),
+    }
+
+
+def _split_zxbcdt(cfg, zxbcdt):
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    g = 1
+    z, xBC, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in + 2 * g * s.d_state], axis=-1
+    )
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d. xBC: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(K):
+        out = out + pad[:, i : i + xBC.shape[1], :].astype(jnp.float32) * w[i]
+    return jax.nn.silu(out + b).astype(xBC.dtype)
+
+
+def segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x: [b, S, nh, hd]; dt: [b, S, nh] (post-softplus); A: [nh] (negative);
+    B, C: [b, S, g, d_state] (g == 1 here). Returns (y [b,S,nh,hd],
+    final_state [b, nh, hd, d_state]).
+    """
+    b, S, nh, hd = x.shape
+    g, ds = B.shape[2], B.shape[3]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    xa = (x * dt[..., None]).reshape(b, nc, chunk, nh, hd)
+    dA = (dt * A[None, None, :]).reshape(b, nc, chunk, nh)  # [b,nc,L,nh]
+    Bc = jnp.broadcast_to(B[:, :, :, None, :], (b, S, g, nh, ds)).reshape(
+        b, nc, chunk, nh, ds
+    )
+    Cc = jnp.broadcast_to(C[:, :, :, None, :], (b, S, g, nh, ds)).reshape(
+        b, nc, chunk, nh, ds
+    )
+
+    dA_cum = jnp.cumsum(dA, axis=2)  # [b,nc,L,nh]
+
+    # pass 1 — chunk-final state contributions (no L x L tensors)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # [b,nc,L,nh]
+    states = jnp.einsum(
+        "bclhs,bclh,bclhd->bchds", Bc, decay_to_end.astype(jnp.float32),
+        xa.astype(jnp.float32),
+    )  # [b,nc,nh,hd,ds]
+
+    # pass 2 — inter-chunk recurrence over chunk summaries
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # [b,nc,nh]
+    init = (
+        jnp.zeros((b, nh, hd, ds), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # [b,nh,hd,ds], [b,nh]
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the state ENTERING this chunk
+
+    _, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    # final state = state entering last chunk, decayed, plus last chunk's sum
+    final_state = (
+        prev_states[-1] * chunk_decay[:, -1][:, :, None, None] + states[:, -1]
+    )
+
+    # pass 3 — per-chunk outputs, streamed (one chunk's L x L decay kernel
+    # alive at a time; checkpointed so backward doesn't stack them)
+    def chunk_out(ci):
+        dAc = dA[:, ci]  # [b,L,nh]
+        cumsc = jnp.cumsum(dAc, axis=1)
+        Lmat = jnp.exp(segsum(jnp.moveaxis(dAc, 2, 1)))  # [b,nh,L,L]
+        sc = jnp.einsum("blhs,bmhs->bhlm", Cc[:, ci], Bc[:, ci]) * Lmat
+        y_in = jnp.einsum("bhlm,bmhd->blhd", sc.astype(x.dtype), xa[:, ci])
+        y_x = jnp.einsum(
+            "blhs,bhds,blh->blhd", Cc[:, ci], prev_states[ci], jnp.exp(cumsc)
+        )
+        return (y_in + y_x).astype(x.dtype)  # [b,L,nh,hd]
+
+    if nc == 1:
+        y = chunk_out(0)[:, None]
+    else:
+        y = jax.lax.map(jax.checkpoint(chunk_out), jnp.arange(nc))  # [nc,b,L,..]
+        y = jnp.moveaxis(y, 0, 1)
+    y = y.reshape(b, S, nh, hd).astype(x.dtype)
+    return y, final_state
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """One-token SSD recurrence.
+
+    x: [b,1,nh,hd]; dt: [b,1,nh]; B, C: [b,1,g,ds]; state: [b,nh,hd,ds].
+    """
+    dA = jnp.exp(dt[:, 0, :] * A[None, :])  # [b,nh]
+    xa = (x * dt[..., None])[:, 0]  # [b,nh,hd]
+    Bx = jnp.einsum("bgs,bhd->bhds", B[:, 0].astype(jnp.float32), xa.astype(jnp.float32))
+    new_state = state * dA[:, :, None, None] + Bx
+    y = jnp.einsum("bhds,bgs->bhd", new_state, C[:, 0].astype(jnp.float32))
+    return y[:, None].astype(x.dtype), new_state
+
+
+def mamba_forward(p, cfg, u, *, state=None, conv_state=None, decode=False):
+    """Full Mamba-2 block. u: [B,S,d].
+
+    Returns (out [B,S,d], new_cache {"conv": [B,K-1,C], "state": ...}).
+    """
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    nh = s.n_heads(cfg.d_model)
+    hd = s.head_dim
+    g = 1
+
+    zxbcdt = u @ p["in_proj"]
+    z, xBC, dt = _split_zxbcdt(cfg, zxbcdt)
+
+    K = s.d_conv
+    if decode:
+        # conv over rolling window [B, K, C]
+        window = jnp.concatenate([conv_state, xBC], axis=1)  # [B,K,C]
+        conv_out = jnp.sum(
+            window.astype(jnp.float32) * p["conv_w"], axis=1, keepdims=True
+        )
+        xBC_c = jax.nn.silu(conv_out + p["conv_b"]).astype(xBC.dtype)
+        new_conv = window[:, 1:]
+    else:
+        if conv_state is not None:
+            xBC_in = jnp.concatenate([conv_state, xBC], axis=1)
+            xBC_c = _causal_conv(xBC_in, p["conv_w"], p["conv_b"])[:, K - 1 :]
+        else:
+            xBC_c = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+        new_conv = xBC[:, -(K - 1) :, :] if xBC.shape[1] >= K - 1 else jnp.pad(
+            xBC, ((0, 0), (K - 1 - xBC.shape[1], 0), (0, 0))
+        )
+
+    x = xBC_c[..., :d_in].reshape(u.shape[0], -1, nh, hd)
+    B_ = xBC_c[..., d_in : d_in + g * s.d_state].reshape(u.shape[0], -1, g, s.d_state)
+    C_ = xBC_c[..., d_in + g * s.d_state :].reshape(u.shape[0], -1, g, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if decode:
+        y, new_state = ssd_decode_step(x, dt, A, B_, C_, state)
+    else:
+        S = x.shape[1]
+        chunk = min(s.chunk, S)
+        if S % chunk != 0:  # pad to a chunk multiple
+            padlen = chunk - S % chunk
+            x = jnp.pad(x, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, padlen), (0, 0)))
+            B_ = jnp.pad(B_, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            C_ = jnp.pad(C_, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        y, new_state = ssd_chunked(x, dt, A, B_, C_, chunk, initial_state=state)
+        y = y[:, :S]
+        x = x[:, :S]
+        dt = dt[:, :S]
+
+    y = (y + x * p["D"][None, None, :, None].astype(y.dtype)).astype(u.dtype)
+    y = y.reshape(u.shape[0], -1, d_in)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "state": new_state}

@@ -1,0 +1,186 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Prefill decompresses the latent into per-head K/V (FLOP-efficient for long
+query blocks). Decode uses the *absorbed* formulation: W_UK is folded into the
+query and W_UV into the output projection, so attention runs directly against
+the compressed latent cache (kv_lora_rank + rope_dim per token) — this is the
+natively-small serving payload highlighted in DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import chunked_attention
+from repro.models.layers import apply_rope, rmsnorm
+from repro.models.schema import ParamSpec
+
+NEG_INF = -1e30
+
+
+def mla_schema(cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    s = {
+        "wkv_a": ParamSpec((d, m.kv_lora_rank + m.qk_rope_dim), ("embed", "lora")),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), ("lora",), init="ones"),
+        "wk_b": ParamSpec((m.kv_lora_rank, h, m.qk_nope_dim), ("lora", "heads", None)),
+        "wv_b": ParamSpec((m.kv_lora_rank, h, m.v_head_dim), ("lora", "heads", None)),
+        "wo": ParamSpec((h * m.v_head_dim, d), ("heads", "embed")),
+    }
+    if m.q_lora_rank:
+        s["wq_a"] = ParamSpec((d, m.q_lora_rank), ("embed", "lora"))
+        s["q_norm"] = ParamSpec((m.q_lora_rank,), ("lora",), init="ones")
+        s["wq_b"] = ParamSpec((m.q_lora_rank, h * qk_dim), ("lora", "heads"))
+    else:
+        s["wq"] = ParamSpec((d, h * qk_dim), ("embed", "heads"))
+    return s
+
+
+def _project_q(p, cfg, x):
+    m = cfg.mla
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    if m.q_lora_rank:
+        q = rmsnorm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(x.shape[:-1] + (cfg.n_heads, qk_dim))
+    return q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+
+
+def latent_kv(p, cfg, x, positions):
+    """x -> (c_kv [B,S,r], k_rope [B,S,rope]) — the cache entries."""
+    m = cfg.mla
+    kv = x @ p["wkv_a"]
+    c_kv = rmsnorm(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank :]
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_prefill(p, cfg, x, positions, *, q_chunk=1024, window=0, shard_ctx=None):
+    """Decompressed MLA attention for training/prefill. Returns (out, cache)."""
+    m = cfg.mla
+    q_nope, q_rope = _project_q(p, cfg, x)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = latent_kv(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["wk_b"]).astype(x.dtype)
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, p["wv_b"]).astype(x.dtype)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[..., None, :], k_nope.shape[:-1] + (m.qk_rope_dim,))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if shard_ctx is not None:
+        # the broadcast+concat of the shared RoPE key must not re-replicate
+        # the decompressed K/V over the head axis (134 GB/device if it does)
+        q = shard_ctx.constrain(q, "batch", None, "heads", None)
+        k = shard_ctx.constrain(k, "batch", None, "heads", None)
+        v = shard_ctx.constrain(v, "batch", None, "heads", None)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    # pad v's head_dim up to k's so chunked_attention can run one einsum
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            q_chunk=q_chunk, scale=scale, shard_ctx=shard_ctx)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.n_heads * m.v_head_dim) @ p["wo"]
+    return out, {"ckv": c_kv, "krope": k_rope}
+
+
+def mla_decode_update(p, cfg, x, cache, lengths, positions, *, valid_len=None,
+                      shard_ctx=None):
+    """Fused latent-cache ring-write + absorbed-matmul decode.
+
+    x: [B,1,d]; cache: {"ckv": [B,W,r], "krope": [B,W,rope]}; lengths: [B].
+    Returns (out [B,1,d], new_cache). Math:
+      score = q_nope^T W_kb c + q_rope^T k_rope ; out_h = W_vb^T (sum p_t c_t)
+    Like decode_attention_update, the write happens INSIDE the shard_map when
+    the latent cache is sequence-sharded.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    q_nope, q_rope = _project_q(p, cfg, x)  # [B,1,H,*]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, p["wk_b"]).astype(x.dtype)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    ckv_new, krope_new = latent_kv(p, cfg, x, positions)  # [B,1,r], [B,1,rope]
+
+    def attend(q_abs_l, q_rope_l, ckv_l, krope_l, valid):
+        s_lat = jnp.einsum(
+            "bqhr,bkr->bhqk", q_abs_l, ckv_l, preferred_element_type=jnp.float32
+        )
+        s_rope = jnp.einsum(
+            "bqhd,bkd->bhqk", q_rope_l, krope_l, preferred_element_type=jnp.float32
+        )
+        scores = (s_lat + s_rope) * scale  # [B,H,1,W]
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+        mx = jnp.max(scores, axis=-1, keepdims=True)
+        e = jnp.exp(scores - mx)
+        e = jnp.where(valid[:, None, None, :], e, 0.0)
+        l = jnp.sum(e, axis=-1, keepdims=True)
+        ctx = jnp.einsum("bhqk,bkr->bqhr", e.astype(ckv_l.dtype), ckv_l)
+        return ctx, mx, l
+
+    W = cache["ckv"].shape[1]
+    if shard_ctx is None or shard_ctx.kv_seq_axes is None:
+        from repro.models import kvcache as kvc
+
+        ckv = kvc.ring_write(cache["ckv"], ckv_new, lengths)
+        krope = kvc.ring_write(cache["krope"], krope_new, lengths)
+        if valid_len is None:
+            valid = jnp.ones((B, W), bool)
+        else:
+            valid = jnp.arange(W)[None, :] < valid_len[:, None]
+        ctx, _, l = attend(q_abs, q_rope, ckv, krope, valid)
+        ctx = ctx / jnp.maximum(
+            l[..., 0].transpose(0, 2, 1)[..., None], 1e-30
+        ).astype(ctx.dtype)
+        new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.models.attention import _local_ring_write, _shard_index
+
+        axes = shard_ctx.kv_seq_axes
+        axes_t = axes if isinstance(axes, tuple) else (axes,)
+        mesh = shard_ctx.mesh
+        vlen = valid_len if valid_len is not None else jnp.full((B,), W, jnp.int32)
+
+        def shard_fn(q_abs_l, q_rope_l, ckvn_l, kropen_l, ckv_l, krope_l,
+                     lens_l, vl):
+            W_l = ckv_l.shape[1]
+            start = _shard_index(mesh, axes_t) * W_l
+            ckv_l = _local_ring_write(ckv_l, ckvn_l, lens_l, start, W_l, W)
+            krope_l = _local_ring_write(krope_l, kropen_l, lens_l, start, W_l, W)
+            slot = start + jnp.arange(W_l)
+            valid = slot[None, :] < vl[:, None]
+            ctx, mx, l = attend(q_abs_l, q_rope_l, ckv_l, krope_l, valid)
+            m_g = jax.lax.pmax(mx, axes)
+            corr = jnp.exp(mx - m_g)  # [B,H,1,1]
+            corr_ctx = corr[..., 0].transpose(0, 2, 1)[..., None]  # [B,1,H,1]
+            num = jax.lax.psum(ctx * corr_ctx, axes)
+            den = jax.lax.psum(l * corr, axes)  # [B,H,1,1]
+            den_ctx = den[..., 0].transpose(0, 2, 1)[..., None]
+            out = (num / jnp.maximum(den_ctx, 1e-30)).astype(q_abs_l.dtype)
+            return out, ckv_l, krope_l
+
+        batch_ax = shard_ctx.rules.get("batch")
+        q4 = P(batch_ax, None, None, None)
+        n3 = P(batch_ax, None, None)
+        kvspec = P(batch_ax, axes, None)
+        b1 = P(batch_ax)
+        ctx, ckv, krope = jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(q4, q4, n3, n3, kvspec, kvspec, b1, b1),
+            out_specs=(q4, kvspec, kvspec),
+        )(q_abs, q_rope, ckv_new, krope_new, cache["ckv"], cache["krope"],
+          lengths, vlen)
+        new_cache = {"ckv": ckv, "krope": krope}
+
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, p["wv_b"]).astype(x.dtype)
+    out = out.reshape(B, 1, cfg.n_heads * m.v_head_dim) @ p["wo"]
+    return out, new_cache

@@ -1,0 +1,291 @@
+"""Top-level Model: schema, init, train/prefill/decode entry points, and
+``input_specs`` (ShapeDtypeStruct stand-ins) for every (arch x input-shape).
+
+Frontend carve-out (DESIGN.md §4): for vlm/audio archs the modality encoder
+is a stub — ``input_specs`` supplies precomputed patch/frame embeddings of
+the right shape and the model consumes them through a linear projector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import kvcache as kvc
+from repro.models import schema as sch
+from repro.models.layers import (
+    cross_entropy,
+    embed_lookup,
+    embed_schema,
+    lm_head,
+    pad_vocab,
+    rmsnorm,
+    rmsnorm_schema,
+    vocab_parallel_nll,
+)
+from repro.models.transformer import (
+    encoder_apply,
+    encoder_schema,
+    layer_groups,
+    stack_apply_decode,
+    stack_apply_full,
+    stack_schema,
+)
+
+FRONTEND_DIM = 1024  # stubbed ViT / speech-encoder feature width
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    dtype: jnp.dtype = jnp.bfloat16
+    remat: bool = False
+    q_chunk: int = 1024
+    unroll: bool = False  # inline scan groups (dry-run cost measurement)
+    remat_policy: str = "full"  # full | dots | none (see transformer.py)
+
+    # ------------------------------------------------------------------ #
+    # Schema / params
+    # ------------------------------------------------------------------ #
+    def schema(self) -> dict:
+        cfg = self.cfg
+        s = {
+            "embed": embed_schema(pad_vocab(cfg.vocab_size), cfg.d_model),
+            "final_norm": rmsnorm_schema(cfg.d_model),
+            "decoder": stack_schema(cfg, cross=cfg.is_encdec),
+        }
+        if cfg.is_encdec:
+            s["encoder"] = encoder_schema(cfg)
+            s["enc_norm"] = rmsnorm_schema(cfg.d_model)
+        if cfg.frontend:
+            s["frontend_proj"] = sch.ParamSpec(
+                (FRONTEND_DIM, cfg.d_model), ("frontend", "embed")
+            )
+        return s
+
+    def init(self, rng) -> dict:
+        return sch.init_params(rng, self.schema(), self.dtype)
+
+    def param_specs(self) -> dict:
+        return sch.abstract_params(self.schema(), self.dtype)
+
+    def param_pspecs(self, rules: dict) -> dict:
+        return sch.partition_specs(self.schema(), rules)
+
+    @property
+    def groups(self):
+        return layer_groups(self.cfg)
+
+    # ------------------------------------------------------------------ #
+    # Input embedding (tokens and/or stub-frontend features)
+    # ------------------------------------------------------------------ #
+    def _embed_inputs(self, params, batch, shard_ctx=None):
+        cfg = self.cfg
+        parts = []
+        if cfg.frontend and "features" in batch:
+            proj = batch["features"].astype(self.dtype) @ params["frontend_proj"]
+            parts.append(proj)
+        if "tokens" in batch and batch["tokens"] is not None:
+            parts.append(
+                embed_lookup(params["embed"], batch["tokens"], shard_ctx)
+            )
+        x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        return x.astype(self.dtype)
+
+    # ------------------------------------------------------------------ #
+    # Forward passes
+    # ------------------------------------------------------------------ #
+    def _encode(self, params, batch, shard_ctx=None):
+        feats = batch["features"].astype(self.dtype) @ params["frontend_proj"]
+        pos = jnp.arange(feats.shape[1])[None, :]
+        enc = encoder_apply(
+            params["encoder"], self.cfg, feats, pos,
+            shard_ctx=shard_ctx, remat=self.remat, unroll=self.unroll,
+            remat_policy=self.remat_policy,
+        )
+        return rmsnorm(enc, params["enc_norm"], self.cfg.norm_eps)
+
+    def backbone(self, params, batch, *, shard_ctx=None, want_cache=False):
+        """Embed + decoder stack + final norm. Returns (x, aux, caches)."""
+        cfg = self.cfg
+        enc_out = self._encode(params, batch, shard_ctx) if cfg.is_encdec else None
+        if cfg.is_encdec:
+            x = embed_lookup(params["embed"], batch["tokens"], shard_ctx).astype(
+                self.dtype
+            )
+        else:
+            x = self._embed_inputs(params, batch, shard_ctx)
+        if shard_ctx is not None and shard_ctx.rules.get("act_seq"):
+            x = shard_ctx.constrain(x, "batch", "act_seq", None)
+        pos = jnp.arange(x.shape[1])[None, :]
+        x, aux, caches = stack_apply_full(
+            params["decoder"], cfg, x, pos,
+            causal=True, want_cache=want_cache, enc_out=enc_out,
+            shard_ctx=shard_ctx, remat=self.remat, groups=self.groups,
+            q_chunk=self.q_chunk, unroll=self.unroll,
+            remat_policy=self.remat_policy,
+        )
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux, caches
+
+    def forward(self, params, batch, *, shard_ctx=None, want_cache=False):
+        """Full-sequence pass. Returns (logits, aux, caches)."""
+        x, aux, caches = self.backbone(
+            params, batch, shard_ctx=shard_ctx, want_cache=want_cache
+        )
+        logits = lm_head(params["embed"], x, self.cfg.vocab_size)
+        if shard_ctx is not None:
+            logits = shard_ctx.constrain(logits, "batch", None, "vocab")
+        return logits, aux, caches
+
+    def loss(self, params, batch, *, shard_ctx=None):
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        aux_w = self.cfg.moe.router_aux_weight if self.cfg.moe else 0.0
+        x, aux, _ = self.backbone(params, batch, shard_ctx=shard_ctx)
+        if self.cfg.frontend and not self.cfg.is_encdec and "features" in batch:
+            x = x[:, -labels.shape[1] :]  # VLM: loss only over the text suffix
+        if shard_ctx is not None and shard_ctx.shards_vocab:
+            nll = vocab_parallel_nll(
+                x, params["embed"], labels, shard_ctx, self.cfg.vocab_size
+            )
+            if mask is None:
+                nll_mean = jnp.mean(nll)
+            else:
+                m = mask.astype(jnp.float32)
+                nll_mean = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+            return nll_mean + aux_w * aux
+        logits = lm_head(params["embed"], x, self.cfg.vocab_size)
+        return cross_entropy(logits, labels, mask) + aux_w * aux
+
+    def prefill(self, params, batch, *, shard_ctx=None):
+        """Returns (last_logits [B,V], caches, lengths [B]).
+
+        The LM head runs on the LAST position only — prefill never pays the
+        [B, S, vocab] logits cost.
+        """
+        x, _, caches = self.backbone(
+            params, batch, shard_ctx=shard_ctx, want_cache=True
+        )
+        B, S = x.shape[:2]
+        logits = lm_head(params["embed"], x[:, -1:], self.cfg.vocab_size)
+        lengths = jnp.full((B,), S, jnp.int32)
+        return logits[:, 0], caches, lengths
+
+    def decode_step(self, params, caches, tokens, lengths, *, shard_ctx=None):
+        """tokens: [B,1] -> (logits [B,V], new_caches, lengths+1)."""
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens, shard_ctx).astype(self.dtype)
+        x, new_caches = stack_apply_decode(
+            params["decoder"], cfg, x, caches, lengths,
+            shard_ctx=shard_ctx, groups=self.groups, unroll=self.unroll,
+        )
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = lm_head(params["embed"], x, cfg.vocab_size)
+        return logits[:, 0], new_caches, lengths + 1
+
+    # ------------------------------------------------------------------ #
+    # Cache construction
+    # ------------------------------------------------------------------ #
+    def _seq_budget(self, seq_len: int) -> int:
+        if self.cfg.sliding_window:
+            return min(seq_len, self.cfg.sliding_window)
+        return seq_len
+
+    def cache_specs(self, B: int, seq_len: int, dtype=None):
+        dtype = dtype or self.dtype
+        W = self._seq_budget(seq_len)
+        enc_len = seq_len // 8 if self.cfg.is_encdec else 0
+        out = {}
+        for gi, g in enumerate(self.groups):
+            block = {
+                f"l{j}": kvc.layer_cache_specs(self.cfg, sig, B, W, enc_len, dtype)
+                for j, sig in enumerate(g.sigs)
+            }
+            if g.count > 1:
+                block = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((g.count,) + s.shape, s.dtype),
+                    block,
+                )
+            out[f"g{gi}"] = block
+        return out
+
+    def init_cache(self, B: int, seq_len: int, dtype=None):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_specs(B, seq_len, dtype)
+        )
+
+    def cache_pspecs(self, rules: dict):
+        from jax.sharding import PartitionSpec as P
+
+        kv_sharded = rules.get("kv_seq") is not None
+        is_p = lambda x: isinstance(x, P)
+        out = {}
+        for gi, g in enumerate(self.groups):
+            block = {}
+            for j, sig in enumerate(g.sigs):
+                axes = kvc.cache_logical_axes(self.cfg, sig, kv_sharded)
+                block[f"l{j}"] = {
+                    k: P(*[(rules.get(a) if a is not None else None) for a in ax])
+                    for k, ax in axes.items()
+                }
+            if g.count > 1:  # scan-stacked: prepend the layers dim
+                block = jax.tree.map(
+                    lambda p: P(*((None,) + tuple(p))), block, is_leaf=is_p
+                )
+            out[f"g{gi}"] = block
+        return out
+
+    # ------------------------------------------------------------------ #
+    # input_specs: ShapeDtypeStruct stand-ins per input shape
+    # ------------------------------------------------------------------ #
+    def input_specs(self, shape: InputShape) -> dict:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+
+        def tok(*s):
+            return jax.ShapeDtypeStruct(s, i32)
+
+        def feat(*s):
+            return jax.ShapeDtypeStruct(s, self.dtype)
+
+        if shape.kind == "train":
+            if cfg.is_encdec:
+                s_src = S // 2
+                s_tgt = S - s_src
+                return {
+                    "features": feat(B, s_src, FRONTEND_DIM),
+                    "tokens": tok(B, s_tgt),
+                    "labels": tok(B, s_tgt),
+                }
+            if cfg.frontend:  # vlm
+                s_img = int(S * cfg.frontend_tokens_fraction)
+                s_txt = S - s_img
+                return {
+                    "features": feat(B, s_img, FRONTEND_DIM),
+                    "tokens": tok(B, s_txt),
+                    "labels": tok(B, s_txt),
+                }
+            return {"tokens": tok(B, S), "labels": tok(B, S)}
+
+        if shape.kind == "prefill":
+            if cfg.is_encdec:
+                s_src = S // 2
+                return {"features": feat(B, s_src, FRONTEND_DIM), "tokens": tok(B, S - s_src)}
+            if cfg.frontend:
+                s_img = int(S * cfg.frontend_tokens_fraction)
+                return {"features": feat(B, s_img, FRONTEND_DIM), "tokens": tok(B, S - s_img)}
+            return {"tokens": tok(B, S)}
+
+        # decode: ONE new token against a cache of seq_len slots
+        return {
+            "tokens": tok(B, 1),
+            "lengths": jax.ShapeDtypeStruct((B,), i32),
+            "caches": self.cache_specs(B, S),
+        }

@@ -1,0 +1,141 @@
+"""Mixture-of-Experts: top-k router + capacity-based gather/scatter dispatch.
+
+Dispatch is GShard/Switch-style positions-via-cumsum — it never materializes
+the [T, E, C] dispatch tensor and its expert GEMMs carry exactly
+T*top_k*capacity_factor worth of real FLOPs, so the roofline compute term
+stays honest. Experts are sharded over the "model" mesh axis (expert
+parallelism) when divisible, else each expert's hidden dim is TP-sharded
+(grok-1: 8 experts on model=16).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.schema import ParamSpec
+
+
+def moe_schema(cfg) -> dict:
+    d = cfg.d_model
+    m = cfg.moe
+    # expert weights are 2D-sharded: experts (or their hidden dim) over
+    # "model" AND their embed dim over "data" — MoE weights are the largest
+    # tensors in the system and replicating them over either axis blows HBM.
+    s = {
+        "router": ParamSpec((d, m.n_experts), ("embed", "experts"), init="small_normal"),
+        "w_gate": ParamSpec((m.n_experts, d, m.d_ff), ("experts", "expert_embed", "expert_ffn")),
+        "w_up": ParamSpec((m.n_experts, d, m.d_ff), ("experts", "expert_embed", "expert_ffn")),
+        "w_down": ParamSpec((m.n_experts, m.d_ff, d), ("experts", "expert_ffn", "expert_embed")),
+    }
+    if m.n_shared_experts:
+        ff = m.n_shared_experts * m.d_ff
+        s["shared"] = {
+            "w_gate": ParamSpec((d, ff), ("embed", "ffn")),
+            "w_up": ParamSpec((d, ff), ("embed", "ffn")),
+            "w_down": ParamSpec((ff, d), ("ffn", "embed")),
+        }
+    return s
+
+
+def capacity(n_tokens: int, cfg_moe) -> int:
+    c = math.ceil(n_tokens * cfg_moe.top_k * cfg_moe.capacity_factor / cfg_moe.n_experts)
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for layout friendliness
+
+
+def router_topk(logits, top_k: int):
+    """fp32 softmax-then-topk (DeepSeek style): returns (weights, ids)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, ids = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, ids
+
+
+def load_balance_loss(logits, ids, n_experts: int):
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    p_mean = jnp.mean(probs.reshape(-1, n_experts), axis=0)
+    onehot = jax.nn.one_hot(ids.reshape(-1), n_experts, dtype=jnp.float32)
+    f_mean = jnp.mean(onehot, axis=0) * ids.shape[-1]
+    return n_experts * jnp.sum(p_mean * f_mean)
+
+
+def moe_apply(p, cfg, x2d, shard_ctx=None):
+    """x2d: [T, d] -> ([T, d], aux_loss). Capacity-dropping top-k dispatch."""
+    m = cfg.moe
+    T, d = x2d.shape
+    E, K = m.n_experts, m.top_k
+    C = capacity(T, m)
+
+    if shard_ctx is not None:
+        x2d = shard_ctx.constrain(x2d, "moe_tokens", None)
+    logits = x2d @ p["router"].astype(x2d.dtype)  # [T, E]
+    if shard_ctx is not None:
+        logits = shard_ctx.constrain(logits, "moe_tokens", None)
+    weights, ids = router_topk(logits, K)  # [T, K]
+    aux = load_balance_loss(logits, ids, E)
+
+    # --- positions: sequential cumsum over the K slots (GShard) ----------- #
+    pos_list, keep_list = [], []
+    counts = jnp.zeros((E,), jnp.int32)
+    for k in range(K):
+        onehot = jax.nn.one_hot(ids[:, k], E, dtype=jnp.int32)  # [T, E]
+        pos_in_e = jnp.cumsum(onehot, axis=0) - 1 + counts[None, :]
+        pos_k = jnp.sum(pos_in_e * onehot, axis=-1)  # [T]
+        counts = counts + jnp.sum(onehot, axis=0)
+        keep_list.append(pos_k < C)
+        pos_list.append(pos_k)
+    pos = jnp.stack(pos_list, axis=1)  # [T, K]
+    keep = jnp.stack(keep_list, axis=1)  # [T, K]
+
+    # --- gather tokens into [E, C, d] -------------------------------------- #
+    # scatter token indices into per-expert slot tables (sentinel T = empty)
+    flat_e = ids.reshape(-1)
+    flat_pos = jnp.where(keep.reshape(-1), pos.reshape(-1), C)  # overflow -> C
+    slot_tok_ext = jnp.full((E, C + 1), T, jnp.int32)
+    tok_ids = jnp.broadcast_to(jnp.arange(T)[:, None], (T, K)).reshape(-1)
+    slot_tok_ext = slot_tok_ext.at[flat_e, flat_pos].set(tok_ids, mode="drop")
+    slot_tok = slot_tok_ext[:, :C]
+
+    # clip-gather instead of a concat-padded source: the concat forced XLA to
+    # materialize an unsharded [T+1, d] copy of every token on every device
+    empty = slot_tok >= T  # [E, C]
+    xe = jnp.take(x2d, jnp.minimum(slot_tok, T - 1), axis=0)  # [E, C, d]
+    xe = jnp.where(empty[..., None], 0, xe)
+    # Dispatch layout switches with capacity: training (C huge) shards the
+    # capacity dim over "data"; decode (C tiny) instead shards xe's embed dim
+    # to MATCH the 2D-sharded expert weights — otherwise XLA all-gathers the
+    # expert weights (the largest tensors in the system) every layer.
+    decode_like = C < 1024
+    if shard_ctx is not None:
+        if decode_like:
+            xe = shard_ctx.constrain(xe, "experts", None, "expert_embed")
+        else:
+            xe = shard_ctx.constrain(xe, "experts", "moe_cap", None)
+
+    # --- expert GEMMs ------------------------------------------------------- #
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_up"]
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # [E, C, d]
+    if shard_ctx is not None:
+        if decode_like:
+            ye = shard_ctx.constrain(ye, "experts", None, "expert_embed")
+        else:
+            ye = shard_ctx.constrain(ye, "experts", "moe_cap", None)
+
+    # --- combine ------------------------------------------------------------ #
+    out = jnp.zeros((T, d), x2d.dtype)
+    for k in range(K):
+        safe_pos = jnp.minimum(pos[:, k], C - 1)
+        val = ye[ids[:, k], safe_pos]  # [T, d]
+        w_k = (weights[:, k] * keep[:, k]).astype(x2d.dtype)
+        out = out + val * w_k[:, None]
+
+    if m.n_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(x2d @ sp["w_gate"]) * (x2d @ sp["w_up"])
+        out = out + hs @ sp["w_down"]
+    return out, aux

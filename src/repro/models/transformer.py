@@ -1,0 +1,407 @@
+"""Decoder/encoder stacks: layer grouping, scan-over-layers, all layer kinds.
+
+Layers are grouped so that heterogeneous stacks still lower to compact HLO:
+  * homogeneous stacks (llama, qwen, ...)      -> one scan
+  * periodic stacks (jamba: 8-layer pattern)   -> scan over superblocks
+  * prefix-irregular stacks (deepseek: dense layer 0 then 59 MoE) -> maximal
+    homogeneous runs, each scanned
+
+A layer signature is ``(kind, is_moe)`` with kind in {"attn", "ssm"}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import kvcache as kvc
+from repro.models.attention import (
+    attn_schema,
+    chunked_attention,
+    decode_attention,
+    decode_attention_update,
+    project_qkv,
+)
+from repro.models.layers import ffn_apply, ffn_schema, rmsnorm, rmsnorm_schema
+from repro.models.mamba import mamba_forward, mamba_schema
+from repro.models.mla import latent_kv, mla_decode_update, mla_prefill, mla_schema
+from repro.models.moe import moe_apply, moe_schema
+from repro.models.schema import ParamSpec, stack
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    sigs: tuple  # layer signatures within one superblock
+    count: int  # number of superblocks (scan length)
+
+
+def layer_signatures(cfg):
+    return tuple(
+        (cfg.layer_kind(i), cfg.layer_is_moe(i)) for i in range(cfg.n_layers)
+    )
+
+
+def layer_groups(cfg) -> list:
+    sigs = layer_signatures(cfg)
+    n = len(sigs)
+    for P in range(1, min(8, n) + 1):
+        if n % P == 0 and all(sigs[i] == sigs[i % P] for i in range(n)):
+            return [Group(sigs[:P], n // P)]
+    groups, i = [], 0
+    while i < n:
+        j = i
+        while j < n and sigs[j] == sigs[i]:
+            j += 1
+        groups.append(Group((sigs[i],), j - i))
+        i = j
+    return groups
+
+
+# --------------------------------------------------------------------------- #
+# Schemas
+# --------------------------------------------------------------------------- #
+def layer_schema(cfg, sig, cross: bool = False) -> dict:
+    kind, is_moe = sig
+    d = cfg.d_model
+    s = {"ln1": rmsnorm_schema(d)}
+    if kind == "attn":
+        s["attn"] = mla_schema(cfg) if cfg.mla is not None else attn_schema(cfg)
+        if cross:
+            s["ln_x"] = rmsnorm_schema(d)
+            s["xattn"] = attn_schema(cfg)
+    else:
+        s["ssm"] = mamba_schema(cfg)
+    if cfg.family != "ssm":
+        s["ln2"] = rmsnorm_schema(d)
+        s["moe" if is_moe else "ffn"] = (
+            moe_schema(cfg) if is_moe else ffn_schema(d, cfg.d_ff)
+        )
+    return s
+
+
+def stack_schema(cfg, cross: bool = False) -> dict:
+    groups = layer_groups(cfg)
+    out = {}
+    for gi, g in enumerate(groups):
+        block = {
+            f"l{j}": layer_schema(cfg, sig, cross) for j, sig in enumerate(g.sigs)
+        }
+        out[f"g{gi}"] = stack(block, g.count) if g.count > 1 else block
+    return out
+
+
+def encoder_schema(cfg) -> dict:
+    """Bidirectional encoder: attention + dense FFN, homogeneous."""
+    d = cfg.d_model
+    block = {
+        "ln1": rmsnorm_schema(d),
+        "attn": attn_schema(cfg),
+        "ln2": rmsnorm_schema(d),
+        "ffn": ffn_schema(d, cfg.d_ff),
+    }
+    return {"g0": stack(block, cfg.encoder_layers)}
+
+
+# --------------------------------------------------------------------------- #
+# Cross attention (no RoPE)
+# --------------------------------------------------------------------------- #
+def _cross_kv(p, cfg, enc_out):
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(enc_out.shape[:2] + (hk, hd))
+    v = (enc_out @ p["wv"]).reshape(enc_out.shape[:2] + (hk, hd))
+    return k, v
+
+
+def _cross_attend_full(p, cfg, h, k, v, shard_ctx=None):
+    q = (h @ p["wq"]).reshape(h.shape[:2] + (cfg.n_heads, cfg.head_dim))
+    o = chunked_attention(q, k, v, causal=False, shard_ctx=shard_ctx)
+    return o.reshape(h.shape[:2] + (-1,)) @ p["wo"]
+
+
+# --------------------------------------------------------------------------- #
+# Full-sequence layer application (train / prefill / encoder)
+# --------------------------------------------------------------------------- #
+def apply_layer_full(
+    lp,
+    cfg,
+    sig,
+    x,
+    positions,
+    *,
+    causal: bool = True,
+    want_cache: bool = False,
+    enc_out=None,
+    shard_ctx=None,
+    q_chunk: int = 1024,
+):
+    """Returns (x, aux_loss, cache_or_None)."""
+    kind, is_moe = sig
+    B, S, d = x.shape
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        if cfg.mla is not None:
+            o, mla_cache = mla_prefill(
+                lp["attn"], cfg, h, positions, q_chunk=q_chunk,
+                window=cfg.sliding_window, shard_ctx=shard_ctx,
+            )
+            x = x + o
+            if want_cache:
+                cache = mla_cache
+        else:
+            q, k, v = project_qkv(lp["attn"], cfg, h, positions)
+            o = chunked_attention(
+                q, k, v, causal=causal, window=cfg.sliding_window,
+                q_chunk=q_chunk, shard_ctx=shard_ctx,
+            )
+            x = x + o.reshape(B, S, -1) @ lp["attn"]["wo"]
+            if want_cache:
+                cache = {"k": k, "v": v}
+        if enc_out is not None:
+            hx = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
+            xk, xv = _cross_kv(lp["xattn"], cfg, enc_out)
+            x = x + _cross_attend_full(lp["xattn"], cfg, hx, xk, xv, shard_ctx)
+            if want_cache:
+                cache.update({"xk": xk, "xv": xv})
+    else:
+        o, ssm_cache = mamba_forward(lp["ssm"], cfg, h)
+        x = x + o
+        if want_cache:
+            cache = ssm_cache
+
+    if cfg.family != "ssm":
+        h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if is_moe:
+            o, aux = moe_apply(lp["moe"], cfg, h2.reshape(B * S, d), shard_ctx)
+            o = o.reshape(B, S, d)
+        else:
+            o = ffn_apply(lp["ffn"], h2)
+        x = x + o
+    if shard_ctx is not None and shard_ctx.rules.get("act_seq"):
+        # sequence parallelism: the residual stream (and thus the remat-saved
+        # scan carry) lives seq-sharded over "model"; XLA turns the TP
+        # all-reduces into reduce-scatter + all-gather pairs.
+        x = shard_ctx.constrain(x, "batch", "act_seq", None)
+    return x, aux, cache
+
+
+# --------------------------------------------------------------------------- #
+# One-token decode layer application
+# --------------------------------------------------------------------------- #
+def apply_layer_decode(lp, cfg, sig, x, lcache, lengths, *, shard_ctx=None):
+    """x: [B,1,d]. Returns (x, new_cache)."""
+    kind, is_moe = sig
+    B = x.shape[0]
+    d = cfg.d_model
+    new_cache = dict(lcache)
+    positions = lengths[:, None]  # [B,1]
+
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        W = lcache["ckv" if cfg.mla is not None else "k"].shape[1]
+        valid_len = jnp.minimum(lengths + 1, W)
+        if cfg.mla is not None:
+            o, mla_cache = mla_decode_update(
+                lp["attn"], cfg, h, lcache, lengths, positions,
+                valid_len=valid_len, shard_ctx=shard_ctx,
+            )
+            new_cache.update(mla_cache)
+            x = x + o
+        else:
+            q, k, v = project_qkv(lp["attn"], cfg, h, positions)
+            o, kc, vc = decode_attention_update(
+                q, k, v, lcache["k"], lcache["v"], lengths,
+                valid_len=valid_len, shard_ctx=shard_ctx,
+            )
+            new_cache["k"] = kc
+            new_cache["v"] = vc
+            x = x + o.reshape(B, 1, -1) @ lp["attn"]["wo"]
+        if cfg.is_encdec and "xk" in lcache:
+            hx = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
+            qx = (hx @ lp["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+            ox = decode_attention(qx, lcache["xk"], lcache["xv"])
+            x = x + ox.reshape(B, 1, -1) @ lp["xattn"]["wo"]
+    else:
+        o, ssm_cache = mamba_forward(
+            lp["ssm"], cfg, h, state=lcache["state"], conv_state=lcache["conv"],
+            decode=True,
+        )
+        x = x + o
+        new_cache.update(ssm_cache)
+
+    if cfg.family != "ssm":
+        h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if is_moe:
+            o, _ = moe_apply(lp["moe"], cfg, h2.reshape(B, d), shard_ctx)
+            o = o.reshape(B, 1, d)
+        else:
+            o = ffn_apply(lp["ffn"], h2)
+        x = x + o
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Stack application
+# --------------------------------------------------------------------------- #
+REMAT_POLICIES = {
+    "full": None,  # save nothing, recompute everything (min memory)
+    "dots": "dots_with_no_batch_dims_saveable",  # save matmul outputs
+    "none": "everything_saveable",  # no recompute (max memory)
+}
+
+
+def _maybe_remat(fn, remat, policy: str = "full"):
+    if not remat:
+        return fn
+    name = REMAT_POLICIES.get(policy, None)
+    if name is None:
+        return jax.checkpoint(fn)
+    return jax.checkpoint(fn, policy=getattr(jax.checkpoint_policies, name))
+
+
+def stack_apply_full(
+    params,
+    cfg,
+    x,
+    positions,
+    *,
+    causal: bool = True,
+    want_cache: bool = False,
+    enc_out=None,
+    shard_ctx=None,
+    remat: bool = False,
+    groups: Optional[list] = None,
+    q_chunk: int = 1024,
+    unroll: bool = False,
+    remat_policy: str = "full",
+):
+    """Train/prefill/encoder pass. Returns (x, aux_total, caches)."""
+    groups = groups or layer_groups(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {}
+
+    for gi, g in enumerate(groups):
+        gp = params[f"g{gi}"]
+
+        def block(xc, lp):
+            aux_b = jnp.zeros((), jnp.float32)
+            cache_b = {}
+            for j, sig in enumerate(g.sigs):
+                xc, aux, cache = apply_layer_full(
+                    lp[f"l{j}"], cfg, sig, xc, positions,
+                    causal=causal, want_cache=want_cache, enc_out=enc_out,
+                    shard_ctx=shard_ctx, q_chunk=q_chunk,
+                )
+                aux_b = aux_b + aux
+                if want_cache:
+                    cache_b[f"l{j}"] = cache
+            return xc, (aux_b, cache_b)
+
+        if g.count == 1:
+            x, (aux_b, cache_b) = _maybe_remat(block, remat, remat_policy)(x, gp)
+            caches[f"g{gi}"] = cache_b
+            aux_total = aux_total + aux_b
+        elif unroll:
+            cache_list = []
+            for i in range(g.count):
+                lp_i = jax.tree.map(lambda a: a[i], gp)
+                x, (aux_b, cache_b) = _maybe_remat(block, remat, remat_policy)(x, lp_i)
+                aux_total = aux_total + aux_b
+                cache_list.append(cache_b)
+            if want_cache:
+                caches[f"g{gi}"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *cache_list
+                )
+        else:
+            x, (aux_s, cache_s) = jax.lax.scan(
+                _maybe_remat(block, remat, remat_policy), x, gp)
+            caches[f"g{gi}"] = cache_s
+            aux_total = aux_total + jnp.sum(aux_s)
+    return x, aux_total, (caches if want_cache else None)
+
+
+def stack_apply_decode(params, cfg, x, caches, lengths, *, shard_ctx=None,
+                       groups: Optional[list] = None, unroll: bool = False):
+    """One-token decode pass. Returns (x, new_caches)."""
+    groups = groups or layer_groups(cfg)
+    new_caches = {}
+    for gi, g in enumerate(groups):
+        gp = params[f"g{gi}"]
+        gc = caches[f"g{gi}"]
+
+        def block(xc, lp_lc):
+            lp, lc = lp_lc
+            new_lc = {}
+            for j, sig in enumerate(g.sigs):
+                xc, nc = apply_layer_decode(
+                    lp[f"l{j}"], cfg, sig, xc, lc[f"l{j}"], lengths,
+                    shard_ctx=shard_ctx,
+                )
+                new_lc[f"l{j}"] = nc
+            return xc, new_lc
+
+        if g.count == 1:
+            x, nc = block(x, (gp, gc))
+        elif unroll:
+            ncs = []
+            for i in range(g.count):
+                slice_i = lambda a: a[i]
+                x, nc_i = block(x, (jax.tree.map(slice_i, gp), jax.tree.map(slice_i, gc)))
+                ncs.append(nc_i)
+            nc = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+        else:
+            # The cache stack rides in the scan CARRY and is updated with a
+            # dynamic_update on the (unsharded) layer dim: XLA bufferizes the
+            # while-loop carry in place, so a decode step holds ONE cache
+            # buffer — stacking per-layer caches as scan ys would instead
+            # double the live cache and defeat donation.
+            def carry_block(carry, lp_li):
+                xc, gcs = carry
+                lp, li = lp_li
+                lc = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, li, 0, keepdims=False),
+                    gcs,
+                )
+                xc, new_lc = block(xc, (lp, lc))
+                gcs = jax.tree.map(
+                    lambda a, n: jax.lax.dynamic_update_index_in_dim(a, n, li, 0),
+                    gcs,
+                    new_lc,
+                )
+                return (xc, gcs), None
+
+            (x, nc), _ = jax.lax.scan(
+                carry_block, (x, gc), (gp, jnp.arange(g.count))
+            )
+        new_caches[f"g{gi}"] = nc
+    return x, new_caches
+
+
+def encoder_apply(params, cfg, x, positions, *, shard_ctx=None, remat=False,
+                  unroll: bool = False, remat_policy: str = "full"):
+    """Bidirectional encoder (seamless): one homogeneous scanned group."""
+    gp = params["g0"]
+
+    def block(xc, lp):
+        h = rmsnorm(xc, lp["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(lp["attn"], cfg, h, positions)
+        o = chunked_attention(q, k, v, causal=False, shard_ctx=shard_ctx)
+        xc = xc + o.reshape(xc.shape[:2] + (-1,)) @ lp["attn"]["wo"]
+        h2 = rmsnorm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + ffn_apply(lp["ffn"], h2)
+        return xc, None
+
+    if unroll:
+        n = jax.tree.leaves(gp)[0].shape[0]
+        for i in range(n):
+            x, _ = _maybe_remat(block, remat, remat_policy)(
+                x, jax.tree.map(lambda a: a[i], gp))
+        return x
+    x, _ = jax.lax.scan(_maybe_remat(block, remat, remat_policy), x, gp)
+    return x

@@ -1,0 +1,7 @@
+from repro.serving.client import ClosedLoopClient, run_closed_loop
+from repro.serving.engine import ServingEngine
+from repro.serving.gateway import Gateway
+from repro.serving.request import Request, Response
+
+__all__ = ["ServingEngine", "Gateway", "Request", "Response",
+           "ClosedLoopClient", "run_closed_loop"]

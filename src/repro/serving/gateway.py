@@ -1,0 +1,49 @@
+"""Gateway / proxied-connection tier (paper §IV-B).
+
+Wraps an engine (or a downstream gateway) and adds the first-hop transport
+cost plus the protocol-translation overhead. Composing
+``Gateway(TCP) -> engine(GDR)`` is the paper's TCP/GDR configuration — the
+"accelerate only the last hop" deployment that captures most of the benefit.
+"""
+
+from __future__ import annotations
+
+from repro.core.transport import PAPER_A2, Transport, TransportProfile
+
+
+class Gateway:
+    def __init__(self, engine, *, first_hop: Transport = Transport.TCP,
+                 profile: TransportProfile = PAPER_A2,
+                 translation_overhead_s: float = 40e-6):
+        self.engine = engine
+        self.first_hop = first_hop
+        self.profile = profile
+        self.overhead = translation_overhead_s
+
+    def submit(self, req, now: float):
+        self.engine.submit(req, now)
+        rec = self.engine._records[req.request_id]
+        hop = self.profile.wire_time(self.first_hop, rec.bytes_in)
+        rec.add("request", hop + self.overhead)
+        if self.first_hop is Transport.TCP:
+            rec.cpu_s += rec.bytes_in * self.profile.tcp_cpu_per_byte
+
+    def step(self):
+        done = self.engine.step()
+        for rsp in done:
+            hop = self.profile.wire_time(self.first_hop, 4 * len(rsp.tokens))
+            rsp.stage_s["response"] = rsp.stage_s.get("response", 0.0) + hop + self.overhead
+            rsp.total_s += hop + self.overhead
+        return done
+
+    @property
+    def queue(self):
+        return self.engine.queue
+
+    @property
+    def _records(self):
+        return self.engine._records
+
+    @property
+    def store(self):
+        return self.engine.store

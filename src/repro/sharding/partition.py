@@ -1,0 +1,175 @@
+"""Logical-axis -> mesh-axis rules and the ShardCtx passed through models."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Everything model code needs to express distributed ops.
+
+    ``rules`` maps logical axis names (see models/schema.py) to a mesh axis
+    name, a tuple of mesh axis names, or None (replicated).
+    """
+
+    mesh: Mesh
+    rules: dict
+
+    @property
+    def shards_vocab(self) -> bool:
+        return self.rules.get("vocab") is not None
+
+    @property
+    def kv_seq_axes(self):
+        return self.rules.get("kv_seq")
+
+    @property
+    def batch_axes(self):
+        return self.rules.get("batch")
+
+    def axis_size(self, logical: str) -> int:
+        ax = self.rules.get(logical)
+        if ax is None:
+            return 1
+        if isinstance(ax, (tuple, list)):
+            size = 1
+            for a in ax:
+                size *= self.mesh.shape[a]
+            return size
+        return self.mesh.shape[ax]
+
+    def activation_pspec(self, ndim: int, batch_dim: int = 0) -> P:
+        parts = [None] * ndim
+        parts[batch_dim] = self.rules.get("batch")
+        return P(*parts)
+
+    def spec(self, *logical) -> P:
+        return P(*[self.rules.get(a) if a is not None else None for a in logical])
+
+    def sharding(self, *logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def constrain(self, x, *logical):
+        return jax.lax.with_sharding_constraint(x, self.sharding(*logical))
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def make_rules(cfg, mesh: Mesh, shape=None, overrides: Optional[dict] = None) -> dict:
+    """Per-(arch, mesh, input-shape) logical->mesh rules.
+
+    Divisibility-aware: any logical axis whose size does not divide the mesh
+    axis is replicated (e.g. GQA kv_heads=8 on model=16 is replicated, which
+    is exactly what Megatron-style TP does).
+    """
+    axes = dict(mesh.shape)
+    model = "model" if "model" in axes else None
+    msize = axes.get("model", 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    bsize = 1
+    for a in batch_axes:
+        bsize *= axes[a]
+
+    from repro.models.layers import pad_vocab  # local import to avoid cycle
+
+    rules: dict = {
+        "embed": None,
+        "seq": None,
+        "head_dim": None,
+        "state": None,
+        "conv": None,
+        "layers": None,
+        "lora": None,
+        "rope": None,
+        "kv_seq": None,
+        "frontend": None,
+    }
+
+    gb = shape.global_batch if shape is not None else None
+    if gb is None or _div(gb, bsize):
+        rules["batch"] = batch_axes if batch_axes else None
+        if shape is not None and shape.is_decode and model is not None:
+            # Decode: KV caches are per-token state that GQA/MLA cannot head-
+            # shard across model=16, so shard the cache's SEQUENCE dim over
+            # "model" and flash-decode within each model group.
+            rules["kv_seq"] = (model,)
+    else:
+        # long_500k (batch=1): batch replicated; KV cache sequence-sharded
+        # over the ENTIRE mesh instead (flash-decoding across all chips:
+        # 524288 slots / 256 = 2048 per chip).
+        rules["batch"] = None
+        if shape is not None and shape.is_decode:
+            seq_axes = batch_axes + ((model,) if model else ())
+            rules["kv_seq"] = seq_axes if seq_axes else None
+
+    # --- training: FSDP (weights/opt sharded over "data") + sequence
+    # parallelism (activations seq-sharded over "model" between layers) ------ #
+    dsize = axes.get("data", 1)
+    if shape is not None and shape.kind == "train" and _div(cfg.d_model, dsize):
+        rules["embed"] = "data"
+    if (
+        shape is not None
+        and shape.kind in ("train", "prefill")
+        and model is not None
+        and _div(shape.seq_len, msize)
+    ):
+        rules["act_seq"] = model
+    else:
+        rules["act_seq"] = None
+
+    rules["vocab"] = model if _div(pad_vocab(cfg.vocab_size), msize) else None
+    rules["heads"] = model if cfg.n_heads and _div(cfg.n_heads, msize) else None
+    rules["kv_heads"] = (
+        model if cfg.n_kv_heads and _div(cfg.n_kv_heads, msize) else None
+    )
+    rules["ffn"] = model if cfg.d_ff and _div(cfg.d_ff, msize) else None
+
+    if cfg.moe is not None:
+        if _div(cfg.moe.n_experts, msize):
+            rules["experts"] = model
+            rules["expert_ffn"] = None
+        else:  # e.g. grok-1: 8 experts on model=16 -> TP inside each expert
+            rules["experts"] = None
+            rules["expert_ffn"] = model if _div(cfg.moe.d_ff, msize) else None
+        # second shard dim for expert weights + dispatch capacity over "data"
+        rules["expert_embed"] = (
+            "data" if "data" in axes and _div(cfg.d_model, axes["data"]) else None
+        )
+        rules["moe_cap"] = "data" if "data" in axes else None
+        # flattened [B*S] token dim of the dispatch tensors: keep it sharded
+        # the way the residual stream is (batch x seq axes)
+        tok_axes = tuple(
+            a for a in (batch_axes + ((model,) if rules.get("act_seq") else ()))
+            if a
+        )
+        rules["moe_tokens"] = tok_axes if tok_axes else None
+    else:
+        rules["experts"] = None
+        rules["expert_ffn"] = None
+        rules["expert_embed"] = None
+        rules["moe_cap"] = None
+
+    if cfg.ssm is not None:
+        nh = cfg.ssm.n_heads(cfg.d_model)
+        ok = _div(nh, msize)
+        rules["ssm_heads"] = model if ok else None
+        rules["ssm_in"] = model if ok else None
+    else:
+        rules["ssm_heads"] = None
+        rules["ssm_in"] = None
+
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def make_ctx(cfg, mesh, shape=None, overrides=None) -> ShardCtx:
+    return ShardCtx(mesh=mesh, rules=make_rules(cfg, mesh, shape, overrides))

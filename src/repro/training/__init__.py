@@ -1,0 +1,8 @@
+from repro.training.data import DataConfig, make_dataset
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.training.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.training.trainer import TrainConfig, train
+
+__all__ = ["DataConfig", "make_dataset", "AdamWConfig", "AdamWState",
+           "adamw_init", "adamw_update", "make_train_step", "make_prefill_step",
+           "make_serve_step", "TrainConfig", "train"]

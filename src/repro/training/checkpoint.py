@@ -1,0 +1,74 @@
+"""Checkpointing: flat-keyed npz of the (params, opt_state, step) pytrees.
+
+Path-keyed so restores are structure-checked; atomic via temp-file rename;
+keeps the last ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = prefix + "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz has no bf16; fp32 is lossless
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state, keep: int = 3):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(params, "params/")
+    flat.update(_flatten(opt_state, "opt/"))
+    flat["step"] = np.asarray(step)
+    tmp = os.path.join(ckpt_dir, f".tmp_ckpt_{step}.npz")
+    final = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    np.savez(tmp, **flat)
+    os.replace(tmp, final)
+    # prune
+    ckpts = sorted(
+        f for f in os.listdir(ckpt_dir) if re.match(r"ckpt_\d+\.npz$", f)
+    )
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(ckpt_dir, old))
+    return final
+
+
+def latest_checkpoint(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    ckpts = sorted(
+        f for f in os.listdir(ckpt_dir) if re.match(r"ckpt_\d+\.npz$", f)
+    )
+    return os.path.join(ckpt_dir, ckpts[-1]) if ckpts else None
+
+
+def restore_checkpoint(path: str, params_like, opt_like):
+    """Restore into the given pytree structures (shape/dtype checked)."""
+    data = np.load(path)
+
+    def fill(tree, prefix):
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for p, leaf in leaves_p:
+            key = prefix + "/".join(
+                str(getattr(q, "key", getattr(q, "idx", q))) for q in p
+            )
+            arr = data[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef.treedef if hasattr(treedef, "treedef") else treedef, out)
+
+    params = fill(params_like, "params/")
+    opt = fill(opt_like, "opt/")
+    return params, opt, int(data["step"])

@@ -1,0 +1,42 @@
+"""jit-able step functions shared by the trainer, server, and dry-run."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(model, opt_cfg: Optional[AdamWConfig] = None, shard_ctx=None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, shard_ctx=shard_ctx)
+        )(params)
+        new_params, new_state, gnorm = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, shard_ctx=None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, shard_ctx=shard_ctx)
+
+    return prefill_step
+
+
+def make_serve_step(model, shard_ctx=None):
+    """Decode: ONE token against the KV cache."""
+
+    def serve_step(params, caches, tokens, lengths):
+        return model.decode_step(
+            params, caches, tokens, lengths, shard_ctx=shard_ctx
+        )
+
+    return serve_step

@@ -1,0 +1,57 @@
+"""Training loop: data pipeline -> jitted train_step -> metrics/checkpoints."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.training.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+from repro.training.data import DataConfig, make_dataset
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.steps import make_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 200
+    log_every: int = 10
+    ckpt_every: int = 0  # 0 = no checkpointing
+    ckpt_dir: str = "checkpoints"
+    seed: int = 0
+
+
+def train(model: Model, data_cfg: DataConfig, train_cfg: TrainConfig,
+          opt_cfg: Optional[AdamWConfig] = None, shard_ctx=None,
+          params=None, log_fn=print):
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=train_cfg.steps)
+    if params is None:
+        params = model.init(jax.random.key(train_cfg.seed))
+    opt_state = adamw_init(params)
+    start_step = 0
+    if train_cfg.ckpt_every:
+        ck = latest_checkpoint(train_cfg.ckpt_dir)
+        if ck:
+            params, opt_state, start_step = restore_checkpoint(ck, params, opt_state)
+            log_fn(f"restored {ck} at step {start_step}")
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg, shard_ctx), donate_argnums=(0, 1))
+    ds = make_dataset(data_cfg).batches()
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start_step, train_cfg.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(ds).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (step + 1) % train_cfg.log_every == 0 or step == start_step:
+            loss = float(metrics["loss"])
+            gn = float(metrics["grad_norm"])
+            dt = time.perf_counter() - t0
+            history.append({"step": step + 1, "loss": loss, "grad_norm": gn, "t": dt})
+            log_fn(f"step {step+1:5d} loss {loss:.4f} |g| {gn:.3f} ({dt:.1f}s)")
+        if train_cfg.ckpt_every and (step + 1) % train_cfg.ckpt_every == 0:
+            save_checkpoint(train_cfg.ckpt_dir, step + 1, params, opt_state)
+    return params, opt_state, history

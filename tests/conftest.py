@@ -1,0 +1,24 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single CPU device; only launch/dryrun.py forces 512 host devices.
+import dataclasses
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def nodrop(cfg):
+    """MoE variant with capacity_factor high enough that nothing drops —
+    required for exact prefill/decode vs full-forward equivalence."""
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg,
+        moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts) / cfg.moe.top_k
+        ),
+    )

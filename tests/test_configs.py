@@ -1,0 +1,85 @@
+"""The 10 assigned architectures: exact hyper-parameters + registry."""
+
+import pytest
+
+from repro.configs import ARCHITECTURES, SHAPES, get_config, get_shape
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab, family)
+    "pixtral-12b": (40, 5120, 32, 8, 14336, 131072, "vlm"),
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256, "dense"),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536, "hybrid"),
+    "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400, "moe"),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206, "audio"),
+    "qwen3-32b": (64, 5120, 64, 8, 25600, 151936, "dense"),
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152, "dense"),
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072, "moe"),
+    "mamba2-130m": (24, 768, 0, 0, 0, 50280, "ssm"),
+    "granite-34b": (88, 6144, 48, 1, 24576, 49152, "dense"),
+}
+
+PARAM_BUDGET = {  # billions, |count - nominal|/nominal tolerance
+    "pixtral-12b": (12, 0.15),
+    "llama3-8b": (8, 0.1),
+    "jamba-v0.1-52b": (52, 0.1),
+    "deepseek-v2-236b": (236, 0.05),
+    "grok-1-314b": (314, 0.05),
+    "qwen3-32b": (32, 0.1),
+    "mamba2-130m": (0.13, 0.6),
+}
+
+
+def test_all_ten_present():
+    assert len(ARCHITECTURES) == 10
+    assert set(EXPECTED) == set(ARCHITECTURES)
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_exact_hyperparams(name):
+    c = get_config(name)
+    L, d, h, kv, ff, v, fam = EXPECTED[name]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (L, d, h, kv)
+    assert (c.d_ff, c.vocab_size, c.family) == (ff, v, fam)
+    assert c.source  # every config must cite its source
+
+
+def test_arch_specifics():
+    ds = get_config("deepseek-v2-236b")
+    assert ds.mla.kv_lora_rank == 512 and ds.moe.n_experts == 160
+    assert ds.moe.top_k == 6 and ds.moe.n_shared_experts == 2
+    jm = get_config("jamba-v0.1-52b")
+    assert jm.moe.n_experts == 16 and jm.moe.top_k == 2
+    assert jm.n_attn_layers() == 4  # 1:7 attention:mamba
+    gk = get_config("grok-1-314b")
+    assert gk.moe.n_experts == 8 and gk.moe.top_k == 2
+    mb = get_config("mamba2-130m")
+    assert mb.ssm.d_state == 128 and mb.is_attention_free
+    qw = get_config("qwen3-32b")
+    assert qw.qk_norm
+    sm = get_config("seamless-m4t-large-v2")
+    assert sm.is_encdec and sm.encoder_layers == 24
+
+
+@pytest.mark.parametrize("name", sorted(PARAM_BUDGET))
+def test_param_counts(name):
+    nominal, tol = PARAM_BUDGET[name]
+    n = get_config(name).param_count() / 1e9
+    assert abs(n - nominal) / nominal <= tol, f"{name}: {n:.1f}B vs {nominal}B"
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_reduced_constraints(name):
+    r = get_config(name).reduced()
+    assert r.n_layers <= 2 and r.d_model <= 512
+    if r.moe is not None:
+        assert r.moe.n_experts <= 4
+    assert r.family == get_config(name).family
+
+
+def test_shapes():
+    assert len(SHAPES) == 4
+    s = get_shape("train_4k")
+    assert s.seq_len == 4096 and s.global_batch == 256 and s.kind == "train"
+    assert get_shape("prefill_32k").global_batch == 32
+    assert get_shape("decode_32k").kind == "decode"
+    assert get_shape("long_500k").seq_len == 524288

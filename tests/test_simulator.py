@@ -1,0 +1,161 @@
+"""The simulator must reproduce the paper's findings (DESIGN.md §1 F1-F7)."""
+
+import pytest
+
+from repro.core import (
+    TABLE_II,
+    ScenarioConfig,
+    Transport,
+    local_reference,
+    run_scenario,
+)
+
+
+def mean_ms(store, **kw):
+    return store.summary(**kw)["mean"] * 1e3
+
+
+def run(w, t, **kw):
+    return run_scenario(ScenarioConfig(workload=TABLE_II[w], transport=t, **kw))
+
+
+# F1 — single client: GDR < RDMA < TCP; GDR saves 15-50% on ResNet50
+def test_f1_single_client_ordering_and_magnitude():
+    res = {t: mean_ms(run("resnet50", t)) for t in
+           (Transport.GDR, Transport.RDMA, Transport.TCP)}
+    assert res[Transport.GDR] < res[Transport.RDMA] < res[Transport.TCP]
+    save = (res[Transport.TCP] - res[Transport.GDR]) / res[Transport.TCP]
+    assert 0.15 <= save <= 0.50, f"GDR saves {save:.0%}"
+
+
+def test_f1_gdr_near_local():
+    """GDR adds only ~0.27-0.53 ms over local processing (paper §IV-A)."""
+    for pre in (False, True):
+        s = run_scenario(ScenarioConfig(workload=TABLE_II["resnet50"],
+                                        transport=Transport.GDR, preprocessed=pre))
+        loc = local_reference(ScenarioConfig(workload=TABLE_II["resnet50"], preprocessed=pre))
+        delta_ms = mean_ms(s) - loc * 1e3
+        assert 0.1 < delta_ms < 0.8, delta_ms
+
+
+def test_f1_deeplab_tcp_penalty():
+    """Large I/O: TCP adds ~70ms (paper: 71/68ms) vs GDR/RDMA."""
+    res = {t: mean_ms(run("deeplabv3", t)) for t in
+           (Transport.GDR, Transport.RDMA, Transport.TCP)}
+    assert 55 < res[Transport.TCP] - res[Transport.GDR] < 95
+    assert 50 < res[Transport.TCP] - res[Transport.RDMA] < 90
+
+
+# F2 — communication fraction: small models gain relatively more
+def test_f2_overhead_ordering():
+    over = {}
+    for w in ("mobilenetv3", "resnet50", "wideresnet101"):
+        s = run(w, Transport.GDR)
+        loc = local_reference(ScenarioConfig(workload=TABLE_II[w])) * 1e3
+        over[w] = (mean_ms(s) - loc) / loc
+    assert over["mobilenetv3"] > over["resnet50"] > over["wideresnet101"]
+    assert over["wideresnet101"] < 0.06  # paper: ~4.5%
+
+
+# F3 — proxied: TCP/GDR captures most of the end-to-end RDMA/GDR gain
+def test_f3_proxied_last_hop():
+    w = TABLE_II["mobilenetv3"]
+
+    def proxied(first, second):
+        return mean_ms(run_scenario(ScenarioConfig(
+            workload=w, transport=second, first_hop=first)))
+
+    tcp_tcp = proxied(Transport.TCP, Transport.TCP)
+    tcp_gdr = proxied(Transport.TCP, Transport.GDR)
+    tcp_rdma = proxied(Transport.TCP, Transport.RDMA)
+    assert tcp_gdr < tcp_rdma < tcp_tcp
+    assert (tcp_tcp - tcp_gdr) / tcp_tcp > 0.15  # paper: 57% saved
+
+    # under concurrency the last-hop GDR approaches end-to-end acceleration
+    # (paper Fig. 14: +4%; ours ~+25-30% — the deviation comes from payload
+    # assumptions: we model raw RGB frames where the paper's clients likely
+    # send compressed captures. Recorded in EXPERIMENTS.md §Deviations.)
+    kw = dict(n_clients=16, requests_per_client=30)
+    tg = mean_ms(run_scenario(ScenarioConfig(
+        workload=w, transport=Transport.GDR, first_hop=Transport.TCP, **kw)))
+    rg = mean_ms(run_scenario(ScenarioConfig(
+        workload=w, transport=Transport.GDR, first_hop=Transport.RDMA, **kw)))
+    tt = mean_ms(run_scenario(ScenarioConfig(
+        workload=w, transport=Transport.TCP, first_hop=Transport.TCP, **kw)))
+    assert tg < tt
+    assert abs(tg - rg) / rg < 0.45  # paper: within 4%; see §Deviations
+    assert (tt - tg) / tt > 0.20  # paper: last-hop GDR saves 27% vs TCP/TCP
+
+
+# F4 — concurrency: copy engine strips RDMA's advantage
+def test_f4_rdma_converges_to_tcp():
+    w = "deeplabv3"
+    kw = dict(n_clients=16, requests_per_client=40)
+    gdr = mean_ms(run(w, Transport.GDR, **kw))
+    rdma = mean_ms(run(w, Transport.RDMA, **kw))
+    tcp = mean_ms(run(w, Transport.TCP, **kw))
+    assert gdr < rdma
+    assert rdma / tcp > 0.85  # RDMA lost its edge (paper: ~equal)
+    assert (tcp - gdr) > 25  # GDR still saves big (paper: 160ms)
+
+
+# F5 — limiting concurrency trades queueing for variability
+def test_f5_stream_limit_tradeoff():
+    w = "resnet50"
+    kw = dict(n_clients=16, requests_per_client=40, transport=Transport.GDR)
+    one = run_scenario(ScenarioConfig(workload=TABLE_II[w], max_streams=1, **kw))
+    sixteen = run_scenario(ScenarioConfig(workload=TABLE_II[w], max_streams=0, **kw))
+    assert one.summary()["mean"] > sixteen.summary()["mean"]  # queueing up
+    assert one.processing_cov() <= sixteen.processing_cov() + 1e-6  # variability down
+
+
+# F6 — priorities: protected under GDR, lost under RDMA
+def test_f6_priority_protection():
+    w = TABLE_II["yolov4"]
+    kw = dict(n_clients=16, n_priority_clients=1, requests_per_client=30,
+              preprocessed=True)
+    gdr = run_scenario(ScenarioConfig(workload=w, transport=Transport.GDR, **kw))
+    rdma = run_scenario(ScenarioConfig(workload=w, transport=Transport.RDMA, **kw))
+
+    def ratio(store):  # priority latency / normal latency
+        hi = store.summary(priority=1)["mean"]
+        lo = store.summary(priority=0)["mean"]
+        return hi / lo
+
+    assert ratio(gdr) < 0.75  # clearly protected
+    assert ratio(rdma) > ratio(gdr)  # protection eroded by the copy engine
+
+
+# F7 — sharing modes: mps >= multi-stream > multi-context; under RDMA
+# mps beats multi-stream, under GDR they tie
+def test_f7_sharing_modes():
+    w = TABLE_II["efficientnetb0"]
+    kw = dict(n_clients=8, requests_per_client=40)
+
+    def m(transport, sharing):
+        return mean_ms(run_scenario(ScenarioConfig(
+            workload=w, transport=transport, sharing=sharing, **kw)))
+
+    gdr = {s: m(Transport.GDR, s) for s in ("multi-stream", "multi-context", "mps")}
+    rdma = {s: m(Transport.RDMA, s) for s in ("multi-stream", "multi-context", "mps")}
+    assert gdr["multi-context"] > gdr["mps"]
+    assert rdma["multi-context"] > rdma["mps"]
+    assert rdma["mps"] <= rdma["multi-stream"] + 1e-6
+    # GDR: stream ~ mps (no copies to interleave differently)
+    assert abs(gdr["mps"] - gdr["multi-stream"]) / gdr["multi-stream"] < 0.10
+
+
+def test_profiler_stage_accounting():
+    """Stage times must (almost) add up to total for a single client."""
+    s = run("resnet50", Transport.RDMA)
+    rec = s.records[10]
+    accounted = sum(rec.stage_s.values())
+    assert accounted <= rec.total + 1e-9
+    assert accounted / rec.total > 0.9
+
+
+def test_cpu_usage_tcp_highest():
+    cpu = {}
+    for t in (Transport.GDR, Transport.RDMA, Transport.TCP):
+        cpu[t] = run("deeplabv3", t).cpu_per_request()
+    assert cpu[Transport.TCP] > 2 * cpu[Transport.GDR]  # paper Fig 9: ~2x
