@@ -45,6 +45,15 @@ def bench_kernels():
     lens = jnp.asarray([256], jnp.int32)
     emit("kernel/decode_attention/interp", t(ops.decode_attention, q1, k, v, lens))
     emit("kernel/decode_attention/oracle", t(ref.decode_attention_ref, q1, k, v, lens))
+    # ragged batch: length-clamped KV BlockSpec streams only valid prefixes
+    qr = jnp.asarray(rng.normal(size=(4, 1, 8, 64)), jnp.bfloat16)
+    kr = jnp.asarray(rng.normal(size=(4, 256, 2, 64)), jnp.bfloat16)
+    vr = jnp.asarray(rng.normal(size=(4, 256, 2, 64)), jnp.bfloat16)
+    lens_r = jnp.asarray([16, 48, 112, 256], jnp.int32)
+    emit("kernel/decode_attention_ragged/interp",
+         t(ops.decode_attention, qr, kr, vr, lens_r))
+    emit("kernel/decode_attention_ragged/oracle",
+         t(ref.decode_attention_ref, qr, kr, vr, lens_r))
 
     x = jnp.asarray(rng.normal(size=(1, 256, 4, 32)), jnp.float32)
     dt = jnp.abs(jnp.asarray(rng.normal(size=(1, 256, 4)), jnp.float32)) * 0.1

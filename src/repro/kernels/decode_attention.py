@@ -8,6 +8,15 @@ the kernel is purely HBM-bandwidth-bound, which is the roofline optimum for
 decode. valid_len masking supports ragged ring buffers.
 
 Layout: q [B, Hkv, G, hd]; k,v [B, Hkv, W, hd] (ops.py transposes).
+
+Length-aware KV streaming: the ``lengths`` scalars are prefetched (SMEM)
+before the grid runs, so the KV BlockSpec ``index_map`` can clamp the block
+index to the last *valid* block per sequence. Grid steps past a short
+sequence's tail re-reference the resident block instead of issuing a fresh
+HBM->VMEM DMA for dead cache (Pallas elides the copy when consecutive grid
+steps map to the same block), so a ragged batch pays bandwidth proportional
+to sum(lengths), not B * W. The in-kernel ``pl.when`` / position mask still
+gates compute, so outputs are bit-identical to the unclamped kernel.
 """
 
 from __future__ import annotations
@@ -69,10 +78,12 @@ def _decode_kernel(
 
 def decode_attention_bhgd(
     q, k, v, lengths, *, scale=None, block_k=512, interpret=False, w_real=None,
+    length_aware=True,
 ):
     """q: [B,Hkv,G,hd]; k,v: [B,Hkv,W,hd]; lengths: [B] int32 valid slots.
 
     w_real: pre-padding cache capacity (mask out the pad region).
+    length_aware: clamp KV block fetches to the valid prefix (see module doc).
     """
     B, Hkv, G, hd = q.shape
     W = k.shape[2]
@@ -84,13 +95,24 @@ def decode_attention_bhgd(
         _decode_kernel, scale=scale, bk=bk, n_kv=n_kv,
         w_real=w_real if w_real is not None else W,
     )
+
+    if length_aware:
+        # Last block holding live KV for sequence b (>= 0 so empty slots
+        # still map somewhere resident).
+        def kv_index(b, h, j, lens):
+            last = jnp.maximum((lens[b] + bk - 1) // bk - 1, 0)
+            return (b, h, jnp.minimum(j, last), 0)
+    else:
+        def kv_index(b, h, j, lens):
+            return (b, h, j, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Hkv, n_kv),
         in_specs=[
             pl.BlockSpec((1, 1, G, hd), lambda b, h, j, lens: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, lens: (b, h, j, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, lens: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), kv_index),
+            pl.BlockSpec((1, 1, bk, hd), kv_index),
         ],
         out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j, lens: (b, h, 0, 0)),
         scratch_shapes=[

@@ -54,10 +54,14 @@ def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
     return jnp.moveaxis(o[:, :, :Sq], 2, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret", "length_aware"))
 def decode_attention(q, k, v, lengths, *, scale=None, block_k=512,
-                     interpret=None):
-    """q: [B,1,H,hd]; k,v: [B,W,Hkv,hd]; lengths: [B] -> [B,1,H,hd]."""
+                     interpret=None, length_aware=True):
+    """q: [B,1,H,hd]; k,v: [B,W,Hkv,hd]; lengths: [B] -> [B,1,H,hd].
+
+    length_aware: short sequences in a ragged batch only stream their valid
+    KV prefix from HBM (dead tail blocks re-reference a resident block).
+    """
     interpret = _interpret_default() if interpret is None else interpret
     B, _, H, hd = q.shape
     W, Hkv = k.shape[1], k.shape[2]
@@ -68,7 +72,7 @@ def decode_attention(q, k, v, lengths, *, scale=None, block_k=512,
     o = _dec.decode_attention_bhgd(
         qg, kt, vt, lengths.astype(jnp.int32),
         scale=scale, block_k=min(block_k, kt.shape[2]), interpret=interpret,
-        w_real=W,
+        w_real=W, length_aware=length_aware,
     )
     return o.reshape(B, 1, H, hd)
 

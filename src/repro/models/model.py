@@ -177,6 +177,31 @@ class Model:
         lengths = jnp.full((B,), S, jnp.int32)
         return logits[:, 0], caches, lengths
 
+    def prefill_bucketed(self, params, batch, lengths, *, shard_ctx=None):
+        """Padded-bucket prefill: tokens [B, L] right-padded, lengths [B] real.
+
+        ATTENTION-ONLY stacks. Causal attention makes trailing pad invisible
+        to real positions, so only the LM-head gather differs from
+        :meth:`prefill`: logits are read at each row's last *real* position
+        (``lengths - 1``), not at L-1. Returns (last_logits [B,V], caches,
+        lengths). Pad positions do write garbage KV, but decode masks them
+        (valid_len) and the next real token overwrites slot ``lengths % W``
+        — so the cache splices straight into a ring pool.
+
+        SSM/hybrid stacks must NOT use this: pad tokens flow through the
+        conv window and SSD recurrence, so the returned recurrent state
+        would differ from exact prefill even though the gathered logits are
+        causal-correct (the engine routes those archs to the exact path).
+        """
+        x, _, caches = self.backbone(
+            params, batch, shard_ctx=shard_ctx, want_cache=True
+        )
+        S = x.shape[1]
+        idx = jnp.clip(lengths - 1, 0, S - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # [B,1,d]
+        logits = lm_head(params["embed"], x_last, self.cfg.vocab_size)
+        return logits[:, 0], caches, lengths.astype(jnp.int32)
+
     def decode_step(self, params, caches, tokens, lengths, *, shard_ctx=None):
         """tokens: [B,1] -> (logits [B,V], new_caches, lengths+1)."""
         cfg = self.cfg

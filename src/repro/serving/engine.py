@@ -7,13 +7,38 @@ drives full configs on TPU). Transport and copy-engine stage times come from
 the calibrated TransportProfile so a request's end-to-end record composes
 measured compute with modeled wires, exactly like the paper's Table I.
 
+Fast path (the serving hot loop, rebuilt for throughput):
+
+* **Bucketed prefill** — prompts are right-padded to power-of-two length
+  buckets and queued admissions sharing a bucket run as ONE padded prefill
+  call (batch dim padded to the FIXED admission width max_batch — trading
+  up to max_batch x prefill FLOPs on sparse admissions for exactly one
+  compile per bucket; dummy rows scatter out-of-bounds and drop). Compile
+  count is O(log max_seq) instead of O(distinct prompt lengths), and an
+  admission burst is a single device dispatch.
+* **Device-resident decode loop** — argmax sampling, EOS detection, per-slot
+  done flags, and length updates all live inside one jitted ``decode_step``
+  that returns a device-side ``done`` mask. The host never syncs per token:
+  up to ``inflight`` steps are dispatched ahead and each step's tokens+done
+  arrive in one host transfer at harvest time. The KV pool is donated
+  through the step, so steady-state decode holds a single cache buffer.
+* **Fused admission splice** — growing a prefill cache to the pool window
+  and scattering it into the free slots (plus lengths/tokens/flag updates)
+  is one jitted, donated call instead of a per-leaf ``.at[].set`` chain.
+
+``legacy=True`` preserves the original synchronous loop (per-length jitted
+prefill, ``block_until_ready`` + host argmax + per-slot Python bookkeeping
+every token) as the measured A/B baseline for ``benchmarks/serving.py`` and
+the drain-equivalence test.
+
 Continuous batching: a fixed pool of ``max_batch`` slots; finished sequences
 free their slot, queued requests join at the next step boundary; every decode
-step runs the whole active batch through one jitted serve_step.
+step runs the whole active batch through one jitted step.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import deque
 from typing import Optional
@@ -25,7 +50,21 @@ import numpy as np
 from repro.core.profiler import ProfileStore, RequestRecord
 from repro.core.transport import PAPER_A2, Transport, TransportProfile
 from repro.models import Model
+from repro.models import kvcache as kvc
 from repro.serving.request import Request, Response
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unharvested decode step."""
+
+    tokens: jax.Array  # [B, 1] device
+    done: jax.Array  # [B] device
+    slots: tuple  # Request-or-None per slot, snapshotted at dispatch
 
 
 class ServingEngine:
@@ -39,6 +78,10 @@ class ServingEngine:
         transport: Transport = Transport.GDR,
         profile: TransportProfile = PAPER_A2,
         eos_token: Optional[int] = None,
+        bucketed_prefill: bool = True,
+        inflight: int = 4,
+        min_bucket: int = 16,
+        legacy: bool = False,
     ):
         self.model = model
         self.params = params
@@ -47,6 +90,26 @@ class ServingEngine:
         self.transport = transport
         self.profile = profile
         self.eos = eos_token
+        # bucketed (right-padded) prefill is only sound when trailing pad
+        # cannot leak into cached state: pure-attention stacks. SSM/hybrid
+        # recurrences integrate pad tokens into conv/state, so those archs
+        # take the exact-shape path (see Model.prefill_bucketed).
+        attention_only = all(
+            kind == "attn" for g in model.groups for (kind, _) in g.sigs
+        )
+        self.bucketed_prefill = bucketed_prefill and attention_only and not legacy
+        if model.cfg.sliding_window and model.cfg.sliding_window < max_seq:
+            # the slot pool is sized to max_seq but a sliding-window cache
+            # rings at W=window: growing/splicing prefill caches into the
+            # pool would mismatch (and right-pad past the window would
+            # clobber live slots). Serve with max_seq <= window instead.
+            raise ValueError(
+                f"slot-pool engine requires max_seq <= sliding_window "
+                f"({max_seq} > {model.cfg.sliding_window})"
+            )
+        self.inflight = 1 if legacy else max(1, inflight)
+        self.min_bucket = min_bucket
+        self.legacy = legacy
         self.store = ProfileStore()
 
         self.queue: deque[Request] = deque()
@@ -56,17 +119,115 @@ class ServingEngine:
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self._records: dict[int, RequestRecord] = {}
 
+        # device-resident per-slot decode state
+        self._gen = jnp.zeros((max_batch,), jnp.int32)
+        self._maxn = jnp.zeros((max_batch,), jnp.int32)
+        self._done = jnp.ones((max_batch,), bool)
+        self._eos_arr = jnp.int32(eos_token if eos_token is not None else -1)
+
+        self._inflight_q: deque[_InFlight] = deque()
+        self._finished_ids: set[int] = set()
+        self._prefill_finished: list[Response] = []
+        self._t_mark = time.perf_counter()
+        self.decode_steps = 0  # total whole-batch decode dispatches
+        self.useful_steps = 0  # harvested steps that advanced a live request
+
+        # jitted entry points; jax.jit retraces per input shape, so the
+        # prefill compile count equals the number of distinct bucket shapes.
         self._decode = jax.jit(
             lambda p, c, t, l: model.decode_step(p, c, t, l)
         )
-        self._prefill_cache = {}
+        self._decode_fast = jax.jit(self._decode_step_impl, donate_argnums=(1,))
+        self._prefill_bucket_jit = jax.jit(self._prefill_bucket_impl)
+        self._prefill_exact_jit = jax.jit(self._prefill_exact_impl)
+        self._admit_jit = jax.jit(self._admit_impl, donate_argnums=(0,))
+        self._prefill_shapes: set = set()
+        self._prefill_cache = {}  # legacy per-(S, features) jit cache
 
     # ------------------------------------------------------------------ #
-    def submit(self, req: Request, now: float):
-        req.t_arrival = now
+    # jitted bodies
+    # ------------------------------------------------------------------ #
+    def _decode_step_impl(self, params, caches, tokens, lengths, gen, maxn,
+                          done, eos):
+        """One whole-batch decode step, sampling and stop logic on device.
+
+        Frozen (done/empty) slots keep their token and length so their ring
+        slot stays put; their lane still flows through the batched compute
+        (the output is discarded), which is what keeps the loop shape-stable.
+        """
+        active = ~done
+        logits, caches, lengths2 = self.model.decode_step(
+            params, caches, tokens, lengths
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        next_tok = jnp.where(active, next_tok, tokens[:, 0])
+        gen = gen + active.astype(jnp.int32)
+        done = done | (gen >= maxn) | (active & (next_tok == eos))
+        lengths = jnp.where(active, lengths2, lengths)
+        return next_tok[:, None], caches, lengths, gen, done
+
+    def _prefill_bucket_impl(self, params, tokens, lengths):
+        """Padded-bucket prefill + greedy first token, one dispatch.
+
+        The cache ring dim is grown to max_seq HERE, inside the same jit:
+        the admission splice then sees one fixed shape regardless of bucket,
+        so it compiles exactly once per engine.
+        """
+        logits, caches, lens = self.model.prefill_bucketed(
+            params, {"tokens": tokens}, lengths
+        )
+        caches = kvc.grow_cache(caches, self.max_seq)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches, lens
+
+    def _prefill_exact_impl(self, params, batch):
+        """Exact-shape prefill (feature payloads / non-bucketable archs),
+        grown to max_seq in-jit so the splice shape stays fixed."""
+        logits, caches, lens = self.model.prefill(params, batch)
+        caches = kvc.grow_cache(caches, self.max_seq)
+        return logits, caches, lens
+
+    def _admit_impl(self, pool, group, slots, true_lens, next_toks, maxn_new,
+                    lengths, tokens, gen, done, maxn):
+        """Scatter a (max_seq-grown) prefill cache into ``slots``, updating
+        all per-slot decode state in the same dispatch.
+
+        Dummy rows (batch padding) carry slot index == max_batch, which is
+        out of bounds: JAX scatters drop OOB updates, so they vanish without
+        a separate code path or extra compile.
+        """
+        out = {}
+        for gi, g in enumerate(self.model.groups):
+            stacked = g.count > 1
+
+            def leaf(p, n, _stacked=stacked):
+                if _stacked:  # [L, B, ...] pool, [L, N, ...] group
+                    return p.at[:, slots].set(n.astype(p.dtype))
+                return p.at[slots].set(n.astype(p.dtype))
+
+            out[f"g{gi}"] = jax.tree.map(leaf, pool[f"g{gi}"], group[f"g{gi}"])
+        lengths = lengths.at[slots].set(true_lens)
+        tokens = tokens.at[slots, 0].set(next_toks)
+        gen = gen.at[slots].set(1)
+        # the prefill token may already exhaust the budget (max_new=1):
+        # such slots start done so decode never advances them
+        done = done.at[slots].set(maxn_new <= 1)
+        maxn = maxn.at[slots].set(maxn_new)
+        return out, lengths, tokens, gen, done, maxn
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request, now: Optional[float] = None):
+        # one clock source (perf_counter) for arrival, first token, and done
+        # stamps; the caller's ``now`` is accepted for API compatibility but
+        # no longer mixed into latency math.
+        req.t_arrival = time.perf_counter()
+        if len(req.prompt_tokens) > self.max_seq:
+            raise ValueError(
+                f"prompt length {len(req.prompt_tokens)} exceeds max_seq "
+                f"{self.max_seq}"
+            )
         rec = RequestRecord(
             request_id=req.request_id, client_id=req.client_id,
-            priority=req.priority, t_issue=now,
+            priority=req.priority, t_issue=req.t_arrival,
             bytes_in=req.payload_bytes, bytes_out=4 * req.max_new_tokens,
         )
         # modeled ingress: wire + (copy engine for staged transports)
@@ -79,6 +240,237 @@ class ServingEngine:
     def _free_slots(self):
         return [i for i, s in enumerate(self.slots) if s is None]
 
+    @property
+    def prefill_compile_count(self) -> int:
+        """Distinct prefill shapes compiled so far (bucketed + exact)."""
+        return len(self._prefill_shapes) + len(self._prefill_cache)
+
+    @property
+    def done_mask(self) -> np.ndarray:
+        """Host copy of the device-side per-slot done flags."""
+        return np.asarray(self._done)
+
+    def _bucket(self, s: int) -> int:
+        return min(max(_next_pow2(s), self.min_bucket), self.max_seq)
+
+    # ------------------------------------------------------------------ #
+    # Admission
+    # ------------------------------------------------------------------ #
+    def _admit(self):
+        free = self._free_slots()
+        if not self.queue or not free:
+            return
+        order = sorted(
+            range(len(self.queue)),
+            key=lambda i: (-self.queue[i].priority, i),
+        )[: len(free)]
+        picked = [self.queue[i] for i in order]
+        for i in sorted(order, reverse=True):
+            del self.queue[i]
+
+        free_it = iter(free)
+        if not self.bucketed_prefill:
+            # exact-shape path still initializes the device-side decode
+            # state (gen/done/max_new) — _prefill_one is legacy-loop-only.
+            for req in picked:
+                self._prefill_exact(next(free_it), req)
+            return
+        buckets: dict[int, list[Request]] = {}
+        for req in picked:
+            if req.features is not None:  # ragged feature payloads: exact path
+                self._prefill_exact(next(free_it), req)
+            else:
+                buckets.setdefault(self._bucket(len(req.prompt_tokens)), []).append(req)
+        for L, reqs in buckets.items():
+            self._prefill_bucket(L, reqs, [next(free_it) for _ in reqs])
+
+    def _prefill_bucket(self, L: int, reqs: list, slots: list):
+        """One padded prefill + fused splice for every request in a bucket.
+
+        The batch dim is padded to a FIXED width (max_batch, the most an
+        admission can hold), so the prefill compile count is exactly the
+        number of length buckets — O(log max_seq) — with no batch-size
+        shape axis."""
+        n = len(reqs)
+        npad = self.max_batch
+        toks = np.zeros((npad, L), np.int32)
+        lens = np.zeros((npad,), np.int32)
+        maxn = np.zeros((npad,), np.int32)
+        slot_idx = np.full((npad,), self.max_batch, np.int32)  # OOB => dropped
+        for j, (req, slot) in enumerate(zip(reqs, slots)):
+            s = len(req.prompt_tokens)
+            toks[j, :s] = req.prompt_tokens
+            lens[j] = s
+            maxn[j] = req.max_new_tokens
+            slot_idx[j] = slot
+        t0 = time.perf_counter()
+        next_toks, cache1, lens_d = self._prefill_bucket_jit(
+            self.params, jnp.asarray(toks), jnp.asarray(lens)
+        )
+        self._splice(cache1, slot_idx, lens_d, next_toks, jnp.asarray(maxn))
+        toks_host = np.asarray(next_toks)  # blocks: prefill timing fence
+        dt = time.perf_counter() - t0
+        self._prefill_shapes.add(("bucket", L))
+        now = time.perf_counter()
+        for j, (req, slot) in enumerate(zip(reqs, slots)):
+            rec = self._records[req.request_id]
+            rec.add("preprocess", dt / n)  # prefill = serving "preprocessing"
+            req.generated.append(int(toks_host[j]))
+            req.t_first_token = now
+            self._place(req, slot)
+        self._t_mark = now  # prefill time is "preprocess", not "inference"
+
+    def _prefill_exact(self, slot: int, req: Request):
+        """Exact-shape prefill for feature-carrying (vlm/audio) requests."""
+        toks = jnp.asarray(req.prompt_tokens, jnp.int32)[None, :]
+        batch = {"tokens": toks}
+        if req.features is not None:
+            batch["features"] = jnp.asarray(req.features)
+        t0 = time.perf_counter()
+        logits, cache1, lengths1 = self._prefill_exact_jit(self.params, batch)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        slot_idx = np.asarray([slot], np.int32)
+        self._splice(cache1, slot_idx, lengths1, next_tok,
+                     jnp.asarray([req.max_new_tokens], jnp.int32))
+        tok_host = int(np.asarray(next_tok)[0])
+        dt = time.perf_counter() - t0
+        self._prefill_shapes.add(
+            ("exact", toks.shape[1],
+             None if req.features is None else np.shape(req.features))
+        )
+        rec = self._records[req.request_id]
+        rec.add("preprocess", dt)
+        req.generated.append(tok_host)
+        req.t_first_token = time.perf_counter()
+        self._place(req, slot)
+        self._t_mark = req.t_first_token  # prefill time is not "inference"
+
+    def _place(self, req: Request, slot: int):
+        """Occupy ``slot`` — or, if the prefill token already exhausted the
+        budget (max_new_tokens <= 1), finish the request right away (the
+        legacy loop instead runs one decode step and returns 2 tokens; the
+        fast path honors the budget)."""
+        if req.max_new_tokens <= 1:
+            # never occupies the slot, so no in-flight snapshot can
+            # reference it — no _finished_ids entry needed
+            self._prefill_finished.append(
+                self._finish(req, self._records[req.request_id])
+            )
+            return
+        self.slots[slot] = req
+
+    def _splice(self, cache1, slot_idx, lens_d, next_toks, maxn):
+        (self.caches, self.lengths, self.tokens, self._gen, self._done,
+         self._maxn) = self._admit_jit(
+            self.caches, cache1, jnp.asarray(slot_idx), lens_d, next_toks,
+            maxn, self.lengths, self.tokens, self._gen, self._done, self._maxn,
+        )
+
+    # ------------------------------------------------------------------ #
+    # Decode: async dispatch window + single-transfer harvest
+    # ------------------------------------------------------------------ #
+    def _dispatch(self):
+        if all(s is None for s in self.slots):
+            return
+        if not self._inflight_q:
+            # pipeline (re)start: don't charge idle time to "inference"
+            self._t_mark = time.perf_counter()
+        while len(self._inflight_q) < self.inflight:
+            (self.tokens, self.caches, self.lengths, self._gen,
+             self._done) = self._decode_fast(
+                self.params, self.caches, self.tokens, self.lengths,
+                self._gen, self._maxn, self._done, self._eos_arr,
+            )
+            self._inflight_q.append(
+                _InFlight(self.tokens, self._done, tuple(self.slots))
+            )
+            self.decode_steps += 1
+
+    def _harvest(self) -> list[Response]:
+        if not self._inflight_q:
+            return []
+        e = self._inflight_q.popleft()
+        toks, _done = jax.device_get((e.tokens, e.done))  # one host transfer
+        now = time.perf_counter()
+        dt = max(now - self._t_mark, 0.0)
+        self._t_mark = now
+        live = [
+            (i, r) for i, r in enumerate(e.slots)
+            if r is not None and r.request_id not in self._finished_ids
+        ]
+        if live:
+            self.useful_steps += 1
+        done: list[Response] = []
+        for i, req in live:
+            rec = self._records[req.request_id]
+            rec.add("inference", dt / len(live))
+            tok = int(toks[i, 0])
+            req.generated.append(tok)
+            finished = len(req.generated) >= req.max_new_tokens or (
+                self.eos is not None and tok == self.eos
+            )
+            if finished:
+                done.append(self._finish(req, rec))
+                self._finished_ids.add(req.request_id)
+                if self.slots[i] is req:
+                    self.slots[i] = None
+        if done and self._finished_ids:
+            # ids only matter while an in-flight snapshot still references
+            # them — prune so the set stays O(max_batch * inflight)
+            live_ids = {
+                r.request_id for ent in self._inflight_q
+                for r in ent.slots if r is not None
+            }
+            self._finished_ids &= live_ids
+        return done
+
+    def _finish(self, req: Request, rec: RequestRecord) -> Response:
+        rsp_wire = self.profile.wire_time(self.transport, rec.bytes_out)
+        rec.add("response", rsp_wire)
+        if self.transport.uses_copy_engine:
+            rec.add("copy_out", self.profile.copy_time(rec.bytes_out))
+        rec.t_done = time.perf_counter() + rsp_wire
+        req.t_done = rec.t_done
+        self.store.add(rec)
+        return Response(
+            request_id=req.request_id,
+            tokens=list(req.generated),
+            ttft_s=req.t_first_token - req.t_arrival,
+            total_s=rec.t_done - rec.t_issue,
+            stage_s=dict(rec.stage_s),
+        )
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> list[Response]:
+        """One continuous-batching iteration. Returns finished responses.
+
+        Fast path: top up the in-flight window (dispatch-ahead, no sync),
+        then harvest the OLDEST dispatched step — the host runs up to
+        ``inflight`` steps behind the device and never blocks on the newest
+        work.
+        """
+        if self.legacy:
+            return self._step_legacy()
+        self._admit()
+        self._dispatch()
+        done = self._harvest()
+        if self._prefill_finished:  # budget met by the prefill token itself
+            done = self._prefill_finished + done
+            self._prefill_finished = []
+        return done
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Response]:
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if (not self.queue and all(s is None for s in self.slots)
+                    and not self._inflight_q):
+                break
+        return out
+
+    # ------------------------------------------------------------------ #
+    # Legacy synchronous loop (seed behavior): the A/B baseline.
+    # ------------------------------------------------------------------ #
     def _prefill_one(self, slot: int, req: Request):
         S = len(req.prompt_tokens)
         toks = jnp.asarray(req.prompt_tokens, jnp.int32)[None, :]
@@ -95,20 +487,27 @@ class ServingEngine:
         logits.block_until_ready()
         dt = time.perf_counter() - t0
         rec = self._records[req.request_id]
-        rec.add("preprocess", dt)  # prefill = the serving "preprocessing"
+        rec.add("preprocess", dt)
 
-        from repro.models.kvcache import grow_cache
+        cache1 = kvc.grow_cache(cache1, self.max_seq)
 
-        cache1 = grow_cache(cache1, self.max_seq)
+        # splice the single-sequence cache into the pool at `slot`
+        def splice_group(pool, one, stacked):
+            if stacked:  # [L, B, ...]
+                return jax.tree.map(
+                    lambda p, n: p.at[:, slot].set(n[:, 0].astype(p.dtype)),
+                    pool, one,
+                )
+            return jax.tree.map(
+                lambda p, n: p.at[slot].set(n[0].astype(p.dtype)), pool, one,
+            )
 
-        # splice the single-sequence cache into the pool at `slot`;
-        # grouped caches: leaves may be stacked [L, B, ...] or plain [B, ...]
-        def splice_leaf(pool, one):
-            if pool.ndim == one.ndim:  # both stacked: [L,B,...]
-                return pool.at[:, slot].set(one[:, 0])
-            return pool.at[slot].set(one[0])
-
-        self.caches = jax.tree.map(splice_leaf, self.caches, cache1)
+        self.caches = {
+            f"g{gi}": splice_group(
+                self.caches[f"g{gi}"], cache1[f"g{gi}"], g.count > 1
+            )
+            for gi, g in enumerate(self.model.groups)
+        }
         self.lengths = self.lengths.at[slot].set(int(lengths1[0]))
         next_tok = int(jnp.argmax(logits[0]))
         self.tokens = self.tokens.at[slot, 0].set(next_tok)
@@ -116,17 +515,21 @@ class ServingEngine:
         self.slots[slot] = req
         req.t_first_token = time.perf_counter()
 
-    def _admit(self):
-        # priority-aware admission
+    def _admit_legacy(self):
         while self.queue and self._free_slots():
             best = max(range(len(self.queue)), key=lambda i: self.queue[i].priority)
             req = self.queue[best]
             del self.queue[best]
             self._prefill_one(self._free_slots()[0], req)
 
-    def step(self) -> list[Response]:
-        """One continuous-batching iteration. Returns finished responses."""
-        self._admit()
+    def _step_legacy(self) -> list[Response]:
+        """Seed loop: host sync + host argmax + per-slot Python loop.
+
+        Kept byte-faithful to the seed, including its max_new_tokens=1
+        quirk (always runs one decode step, returning 2 tokens); the fast
+        path finishes such requests at prefill time instead.
+        """
+        self._admit_legacy()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return []
@@ -134,6 +537,8 @@ class ServingEngine:
         logits, self.caches, self.lengths = self._decode(
             self.params, self.caches, self.tokens, self.lengths
         )
+        self.decode_steps += 1
+        self.useful_steps += 1  # sync loop only ever steps live slots
         logits.block_until_ready()
         dt = time.perf_counter() - t0
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
@@ -150,28 +555,6 @@ class ServingEngine:
                 self.eos is not None and tok == self.eos
             )
             if finished:
-                rsp_wire = self.profile.wire_time(self.transport, rec.bytes_out)
-                rec.add("response", rsp_wire)
-                if self.transport.uses_copy_engine:
-                    rec.add("copy_out", self.profile.copy_time(rec.bytes_out))
-                rec.t_done = time.perf_counter() + rsp_wire
-                self.store.add(rec)
-                done.append(
-                    Response(
-                        request_id=req.request_id,
-                        tokens=list(req.generated),
-                        ttft_s=req.t_first_token - req.t_arrival,
-                        total_s=rec.t_done - rec.t_issue,
-                        stage_s=dict(rec.stage_s),
-                    )
-                )
+                done.append(self._finish(req, rec))
                 self.slots[i] = None
         return done
-
-    def run_until_drained(self, max_steps: int = 10_000) -> list[Response]:
-        out = []
-        for _ in range(max_steps):
-            out.extend(self.step())
-            if not self.queue and all(s is None for s in self.slots):
-                break
-        return out

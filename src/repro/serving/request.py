@@ -19,7 +19,9 @@ class Request:
     client_id: int = 0
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     features: Optional[np.ndarray] = None  # vlm/audio stub payload
-    # filled by the engine
+    # filled by the engine — all three stamps come from ONE clock
+    # (time.perf_counter), so ttft/total latencies are clock-consistent
+    # regardless of what the caller passes to submit().
     t_arrival: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
@@ -37,6 +39,6 @@ class Request:
 class Response:
     request_id: int
     tokens: list
-    ttft_s: float  # time to first token
+    ttft_s: float  # time to first token (perf_counter deltas)
     total_s: float
     stage_s: dict

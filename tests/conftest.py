@@ -22,3 +22,43 @@ def nodrop(cfg):
             cfg.moe, capacity_factor=float(cfg.moe.n_experts) / cfg.moe.top_k
         ),
     )
+
+
+@pytest.fixture(scope="session")
+def model_bank():
+    """Session-scoped (Model, params) cache.
+
+    Params are shared across Model variants that don't change the schema
+    (remat/unroll flags), so e.g. the forward-, decode- and train-step smoke
+    tests for one architecture initialize weights once instead of three
+    times. ModelConfig is a frozen dataclass, so it keys the cache directly.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import Model
+
+    models: dict = {}
+    params: dict = {}
+
+    def get(cfg, dtype=jnp.bfloat16, seed=0, **model_kw):
+        mkey = (cfg, str(dtype), tuple(sorted(model_kw.items())))
+        pkey = (cfg, str(dtype), seed)
+        if mkey not in models:
+            models[mkey] = Model(cfg, dtype=dtype, **model_kw)
+        if pkey not in params:
+            params[pkey] = models[mkey].init(jax.random.key(seed))
+        return models[mkey], params[pkey]
+
+    return get
+
+
+def arch_cases(slow_names=()):
+    """Parametrize over all architectures, marking the named ones slow."""
+    from repro.configs import ARCHITECTURES
+
+    slow = set(slow_names)
+    return [
+        pytest.param(n, marks=pytest.mark.slow) if n in slow else n
+        for n in sorted(ARCHITECTURES)
+    ]

@@ -2,18 +2,17 @@
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core.transport import Transport
-from repro.models import Model
 from repro.serving import ClosedLoopClient, Gateway, ServingEngine, run_closed_loop
 from repro.training import AdamWConfig, DataConfig, TrainConfig, train
 
 
-def test_serving_end_to_end_continuous_batching():
+def test_serving_end_to_end_continuous_batching(model_bank):
     cfg = get_config("llama3-8b").reduced()
-    model = Model(cfg)
-    params = model.init(jax.random.key(0))
+    model, params = model_bank(cfg)
     eng = ServingEngine(model, params, max_batch=2, max_seq=64,
                         transport=Transport.GDR)
     clients = [ClosedLoopClient(i, cfg.vocab_size, prompt_len=8, max_new_tokens=4)
@@ -31,10 +30,9 @@ def test_serving_end_to_end_continuous_batching():
     assert means["copy_in"] == 0  # GDR skips the copy engine
 
 
-def test_serving_transport_changes_modeled_stages():
+def test_serving_transport_changes_modeled_stages(model_bank):
     cfg = get_config("starcoder2-3b").reduced()
-    model = Model(cfg)
-    params = model.init(jax.random.key(0))
+    model, params = model_bank(cfg)
     stage = {}
     for t in (Transport.GDR, Transport.RDMA):
         eng = ServingEngine(model, params, max_batch=2, max_seq=48, transport=t)
@@ -46,10 +44,9 @@ def test_serving_transport_changes_modeled_stages():
     assert stage[Transport.GDR]["copy_in"] == 0
 
 
-def test_gateway_adds_first_hop():
+def test_gateway_adds_first_hop(model_bank):
     cfg = get_config("llama3-8b").reduced()
-    model = Model(cfg)
-    params = model.init(jax.random.key(0))
+    model, params = model_bank(cfg)
     eng = ServingEngine(model, params, max_batch=2, max_seq=48,
                         transport=Transport.GDR)
     gw = Gateway(eng, first_hop=Transport.TCP)
@@ -60,7 +57,9 @@ def test_gateway_adds_first_hop():
     assert rec.stage_s["request"] > 0
 
 
+@pytest.mark.slow
 def test_training_loss_decreases_and_checkpoints():
+    from repro.models import Model
     import tempfile
 
     cfg = get_config("starcoder2-3b").reduced()
@@ -79,15 +78,14 @@ def test_training_loss_decreases_and_checkpoints():
     assert hist[-1]["loss"] < hist[0]["loss"] - 0.2, hist
 
 
-def test_checkpoint_roundtrip():
+def test_checkpoint_roundtrip(model_bank):
     import tempfile
 
     from repro.training.checkpoint import restore_checkpoint, save_checkpoint
     from repro.training.optimizer import adamw_init
 
     cfg = get_config("mamba2-130m").reduced()
-    model = Model(cfg)
-    params = model.init(jax.random.key(3))
+    model, params = model_bank(cfg, seed=3)
     opt = adamw_init(params)
     with tempfile.TemporaryDirectory() as d:
         path = save_checkpoint(d, 7, params, opt)
