@@ -1,0 +1,148 @@
+"""Disaggregated prefill->decode handoff sweep: the paper's pipeline
+finding on the REAL serving path.
+
+Runs the same ragged workload through the single-node ServingEngine and
+the DisaggregatedEngine under each TransferMode on 8 forced host devices
+(2-pod mesh: the pod-axis collective genuinely crosses devices). Reports
+per-mechanism handoff bytes (wire + useful per-request prefixes), the
+handoff charge folded into TTFT, raw TTFT, and token fidelity vs the
+single-engine baseline. Asserts the paper's ordering on the deterministic
+per-request handoff charge — DIRECT_HBM <= DIRECT_DMA <= HOST_STAGED (the
+TTFT transfer component; raw TTFT additionally carries mode-independent
+prefill/queue wall) — and that DIRECT_HBM / DIRECT_DMA decode output is
+token-identical to the single engine (HOST_STAGED is int8-lossy by
+design).
+
+Usage: PYTHONPATH=src python -m benchmarks.disagg [--quick] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def run_workload(eng, cfg, lens, max_new):
+    from benchmarks.serving import make_requests
+
+    reqs = make_requests(cfg, lens, max_new)
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r, time.perf_counter())
+    out = eng.run_until_drained(max_steps=100_000)
+    wall = time.perf_counter() - t0
+    assert len(out) == len(reqs), (len(out), len(reqs))
+    by_id = {r.request_id: r for r in out}
+    tokens = [tuple(by_id[r.request_id].tokens) for r in reqs]
+    ttfts = [by_id[r.request_id].ttft_s for r in reqs]
+    return tokens, ttfts, wall
+
+
+def bench_disagg(quick: bool):
+    import jax
+
+    from benchmarks.serving import micro_config
+    from repro.core.transfer import TransferMode
+    from repro.models import Model
+    from repro.serving import DisaggregatedEngine, ServingEngine, make_pod_mesh
+
+    cfg = micro_config()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+
+    n_req = 6 if quick else 16
+    lens = [7 + 11 * i for i in range(n_req)]
+    max_new = 4 if quick else 12
+    kw = dict(max_batch=4, max_seq=256)
+
+    mesh = make_pod_mesh()  # 2 pods on the forced-host backend
+    base_tokens, base_ttfts, base_wall = run_workload(
+        ServingEngine(model, params, **kw), cfg, lens, max_new
+    )
+
+    rows = {}
+    for mode in TransferMode:
+        eng = DisaggregatedEngine(
+            model, params, transfer_mode=mode, mesh=mesh, **kw
+        )
+        tokens, ttfts, wall = run_workload(eng, cfg, lens, max_new)
+        recs = eng.store.records
+        charge = sum(r.stage_s.get("transfer", 0.0) for r in recs) / len(recs)
+        match = sum(a == b for a, b in zip(tokens, base_tokens)) / len(tokens)
+        rows[mode.value] = {
+            "handoffs": eng.handoffs,
+            "handoff_wire_bytes": eng.handoff_wire_bytes,
+            "request_prefix_bytes_mean": round(
+                eng.handoff_request_bytes / n_req
+            ),
+            "handoff_wall_s_total": round(eng.handoff_wall_s, 4),
+            "handoff_charge_s_mean": round(charge, 6),
+            "ttft_s_mean": round(sum(ttfts) / len(ttfts), 5),
+            "wall_s": round(wall, 3),
+            "token_match_vs_single_engine": round(match, 3),
+        }
+
+    hbm = rows[TransferMode.DIRECT_HBM.value]
+    dma = rows[TransferMode.DIRECT_DMA.value]
+    tcp = rows[TransferMode.HOST_STAGED.value]
+    # the paper's headline: last-hop hardware acceleration recovers most of
+    # the inter-stage cost (deterministic modeled charge on host devices)
+    assert (hbm["handoff_charge_s_mean"] <= dma["handoff_charge_s_mean"]
+            <= tcp["handoff_charge_s_mean"]), rows
+    # full-precision mechanisms are bit-exact end to end
+    assert hbm["token_match_vs_single_engine"] == 1.0, rows
+    assert dma["token_match_vs_single_engine"] == 1.0, rows
+    # staged undercuts full-precision wire bytes via int8 requantization
+    assert tcp["handoff_wire_bytes"] < hbm["handoff_wire_bytes"], rows
+
+    return {
+        "workload": {
+            "model": cfg.name, "prompt_lens": lens,
+            "max_new_tokens": max_new, "max_batch": kw["max_batch"],
+            "max_seq": kw["max_seq"], "backend": jax.default_backend(),
+            "devices": len(jax.devices()), "pods": mesh.shape["pod"],
+        },
+        "single_engine": {
+            "wall_s": round(base_wall, 3),
+            "ttft_s_mean": round(sum(base_ttfts) / len(base_ttfts), 5),
+        },
+        "disaggregated": rows,
+        "ordering_ok": {
+            "handoff_charge": True,  # asserted above
+            "raw_ttft": (hbm["ttft_s_mean"] <= dma["ttft_s_mean"]
+                         <= tcp["ttft_s_mean"]),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small workload (CI smoke)")
+    ap.add_argument("--out", default="BENCH_disagg.json")
+    args = ap.parse_args()
+
+    result = {
+        "benchmark": "disaggregated prefill->decode KV handoff sweep",
+        "disagg": bench_disagg(args.quick),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    d = result["disagg"]["disaggregated"]
+    print("\n# per-mechanism handoff (mean/request): " + "; ".join(
+        f"{m}: {r['request_prefix_bytes_mean']/1e3:.1f} KB, "
+        f"{r['handoff_charge_s_mean']*1e6:.0f} us charge, "
+        f"ttft {r['ttft_s_mean']*1e3:.2f} ms, "
+        f"match {r['token_match_vs_single_engine']:.0%}"
+        for m, r in d.items()
+    ))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,74 +1,87 @@
-"""Disaggregated prefill->decode: the paper's proxied-connection study mapped
-onto a modern LLM serving pattern (DESIGN.md §2).
+"""Disaggregated prefill->decode serving: the paper's proxied-connection
+study mapped onto a modern LLM serving pattern (DESIGN.md §2).
 
-Pod 0 runs prefill, pod 1 decodes; the KV cache crosses the pod boundary via
-``core.transfer.kv_transfer`` in each of the three modes (DIRECT_HBM = GDR,
-DIRECT_DMA = RDMA, HOST_STAGED = TCP). Runs on 8 forced host devices
-(2 pods x 2 data x 2 model) and reports per-mode wire bytes + the modeled
-transfer latency on both calibration profiles.
+Pod 0 runs admission+prefill, pod 1 owns the decode slot pool; each
+admitted request's KV cache (plus its slot metadata) crosses the pod
+boundary through ``core.transfer.kv_transfer`` under the deployment's
+mechanism — DIRECT_HBM = GPUDirect, DIRECT_DMA = RDMA, HOST_STAGED = TCP
+(int8-requantized with per-source-pod scales). Runs end to end on 8 forced
+host devices (2-pod mesh) and prints, per mechanism: wire bytes, the
+per-request handoff charge folded into TTFT, and decode-token fidelity vs
+a single fused engine.
 
 Run: PYTHONPATH=src python examples/disaggregated_prefill.py
 """
 
 import os
+import time
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
 from repro.configs import get_config
-from repro.core.transfer import TransferMode, kv_transfer, transfer_bytes
-from repro.core.transport import PAPER_A2, TPU_V5E, Transport
+from repro.core.transfer import MODE_TRANSPORT, TransferMode
 from repro.models import Model
+from repro.serving import DisaggregatedEngine, ServingEngine, make_pod_mesh
+from repro.serving.request import Request
+
+
+def _requests(cfg, lens, max_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            prompt_tokens=rng.integers(0, cfg.vocab_size, s, dtype=np.int32),
+            max_new_tokens=max_new,
+        )
+        for s in lens
+    ]
+
+
+def drain(eng, cfg, lens):
+    reqs = _requests(cfg, lens)
+    for r in reqs:
+        eng.submit(r, time.perf_counter())
+    out = eng.run_until_drained()
+    assert len(out) == len(reqs)
+    by_id = {r.request_id: r for r in out}
+    return [tuple(by_id[r.request_id].tokens) for r in reqs], [
+        by_id[r.request_id] for r in reqs
+    ]
 
 
 def main():
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
     cfg = get_config("llama3-8b").reduced()
     model = Model(cfg)
     params = model.init(jax.random.key(0))
+    mesh = make_pod_mesh()
+    lens = [6, 11, 19, 27]
+    kw = dict(max_batch=2, max_seq=64)
 
-    B, S = 2, 32
-    toks = jnp.asarray(np.arange(B * S).reshape(B, S) % cfg.vocab_size, jnp.int32)
-    _, caches, _ = model.prefill(params, {"tokens": toks})
+    print(f"{cfg.name}: {len(jax.devices())} host devices, "
+          f"{mesh.shape['pod']}-pod mesh (prefill pod 0 -> decode pod "
+          f"{mesh.shape['pod'] - 1})")
+    base_tokens, _ = drain(ServingEngine(model, params, **kw), cfg, lens)
 
-    # tile the cache across pods: leaf -> [npods, ...] (pod-sharded)
-    tiled = jax.tree.map(lambda x: jnp.stack([x, jnp.zeros_like(x)]), caches)
-
-    print(f"prefill produced KV cache for {cfg.name}: "
-          f"{sum(l.nbytes for l in jax.tree.leaves(caches))/1e6:.2f} MB/sequence-batch")
-    with mesh:
-        for mode in TransferMode:
-            moved = kv_transfer(tiled, mesh, mode=mode)
-            jax.block_until_ready(moved)
-            # pod1 must now hold pod0's cache (ring 0->1)
-            got = jax.tree.leaves(moved)[0][1]
-            want = jax.tree.leaves(tiled)[0][0]
-            if mode is not TransferMode.HOST_STAGED:  # staged is int8-lossy
-                np.testing.assert_allclose(
-                    np.asarray(got, np.float32), np.asarray(want, np.float32),
-                    atol=1e-6,
-                )
-            nbytes = transfer_bytes(tiled, mode)
-            t_a2 = PAPER_A2.wire_time(
-                {TransferMode.DIRECT_HBM: Transport.GDR,
-                 TransferMode.DIRECT_DMA: Transport.RDMA,
-                 TransferMode.HOST_STAGED: Transport.TCP}[mode], nbytes)
-            t_tpu = TPU_V5E.wire_time(
-                {TransferMode.DIRECT_HBM: Transport.GDR,
-                 TransferMode.DIRECT_DMA: Transport.RDMA,
-                 TransferMode.HOST_STAGED: Transport.TCP}[mode], nbytes)
-            extra = "" if mode is not TransferMode.DIRECT_DMA else " + copy-engine hop"
-            print(f"  {mode.value:12s}: {nbytes/1e6:7.2f} MB on the wire; "
-                  f"modeled {t_a2*1e3:7.2f} ms (25GbE A2) / "
-                  f"{t_tpu*1e3:6.2f} ms (v5e DCN){extra}")
-    print("\ntakeaway: DIRECT_HBM (GDR analogue) moves the full-precision cache "
-          "with zero staging copies;\nHOST_STAGED pays requantization + staging "
-          "— the paper's protocol-translation trade (finding 2).")
+    for mode in TransferMode:
+        eng = DisaggregatedEngine(
+            model, params, transfer_mode=mode, mesh=mesh, **kw
+        )
+        tokens, rsps = drain(eng, cfg, lens)
+        match = sum(a == b for a, b in zip(tokens, base_tokens)) / len(tokens)
+        recs = eng.store.records
+        charge = sum(r.stage_s.get("transfer", 0.0) for r in recs) / len(recs)
+        print(f"  {mode.value:12s} ({MODE_TRANSPORT[mode].value:4s}): "
+              f"{eng.handoff_wire_bytes / 1e6:6.2f} MB on the wire over "
+              f"{eng.handoffs} handoffs; "
+              f"{charge * 1e6:7.1f} us/request handoff charge; "
+              f"tokens vs fused engine: {match:.0%}")
+    print("\ntakeaway: DIRECT_HBM (GDR analogue) lands the full-precision "
+          "cache in decode-pod HBM with zero\nstaging copies and stays "
+          "bit-exact; HOST_STAGED pays requantization + staging copies + "
+          "CPU —\nthe paper's protocol-translation trade (finding 2), now "
+          "measured on the live serving path.")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ STAGES = (
     "copy_in",  # H2D through the copy engine (TCP/RDMA only)
     "queue",  # waiting for an execution lane
     "preprocess",
+    "transfer",  # inter-stage KV handoff (disaggregated prefill -> decode)
     "inference",
     "copy_out",  # D2H
     "response",  # server -> client wire
@@ -36,6 +37,10 @@ class RequestRecord:
     cpu_s: float = 0.0  # host-CPU busy time attributable to this request
     bytes_in: int = 0
     bytes_out: int = 0
+    # wall clock actually spent in the inter-stage handoff collective; when
+    # the charged "transfer" stage is profile-modeled instead (host-device
+    # runs), the engine swaps this measured wall out of ttft/total
+    transfer_wall_s: float = 0.0
 
     def add(self, stage: str, dur: float):
         self.stage_s[stage] = self.stage_s.get(stage, 0.0) + dur
@@ -50,10 +55,12 @@ class RequestRecord:
 
     @property
     def data_movement(self) -> float:
-        """copy + request + response (the paper's 'data movement' fraction)."""
+        """copy + request + transfer + response (the paper's 'data movement'
+        fraction, plus the disaggregated inter-stage hop)."""
         return (
             self.copy_time
             + self.stage_s.get("request", 0.0)
+            + self.stage_s.get("transfer", 0.0)
             + self.stage_s.get("response", 0.0)
         )
 

@@ -43,6 +43,13 @@ class Transport(enum.Enum):
     def uses_network(self) -> bool:
         return self is not Transport.LOCAL
 
+    @property
+    def handoff_copies(self) -> int:
+        """Copy-engine hops on an inter-stage (prefill->decode) handoff:
+        TCP pays stack staging + H2D, RDMA one pinned-host bounce, GDR
+        lands straight in destination HBM (paper §II)."""
+        return {Transport.TCP: 2, Transport.RDMA: 1}.get(self, 0)
+
 
 @dataclasses.dataclass(frozen=True)
 class TransportProfile:
@@ -88,6 +95,14 @@ class TransportProfile:
         if nbytes == 0:
             return 0.0
         return self.copy_base_s + nbytes / self.copy_bw
+
+    def handoff_time(self, transport: Transport, nbytes: int) -> float:
+        """Inter-stage (prefill->decode) handoff latency: wire time plus the
+        staging copy-engine hops the mechanism cannot skip. ``nbytes`` must
+        already be the on-wire count (int8-requantized for the TCP/staged
+        mechanism — see ``transfer.transfer_bytes``)."""
+        return (self.wire_time(transport, nbytes)
+                + transport.handoff_copies * self.copy_time(nbytes))
 
 
 # Calibrated against the paper's reported deltas (see module docstring).

@@ -13,6 +13,8 @@ every slot is valid, which also models sliding-window caches exactly
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -101,6 +103,46 @@ def grow_cache(caches, new_w: int):
         return jnp.pad(leaf, pad)
 
     return jax.tree_util.tree_map_with_path(grow, caches)
+
+
+# per-key leaf rank WITHOUT scan-stacking; leading extra axes (stacked layer
+# dims) precede the batch dim, so batch axis = leaf.ndim - _BASE_NDIM[key]
+_BASE_NDIM = {"k": 4, "v": 4, "xk": 4, "xv": 4, "ckv": 3, "krope": 3,
+              "conv": 3, "state": 4}
+
+
+def request_cache_nbytes(caches, true_len: int, *, itemsize=None) -> int:
+    """Bytes of ONE sequence's live cache in a pooled/padded tree.
+
+    Seq-keyed leaves (ring dim) contribute per-token bytes * ``true_len``
+    (clamped to the ring width); static leaves (SSM conv/state, cross-attn
+    xk/xv) count in full. This is what a disaggregated handoff actually puts
+    on the wire for one request — the pool's batch and ring padding is
+    excluded. ``itemsize``: optional fn(leaf) -> bytes/element override for
+    wire formats (e.g. int8 host staging).
+    """
+    total = 0.0
+
+    def visit(path, leaf):
+        nonlocal total
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        base = _BASE_NDIM.get(key)
+        if base is None:
+            return
+        isz = itemsize(leaf) if itemsize else jnp.dtype(leaf.dtype).itemsize
+        nelem = 1
+        for d in leaf.shape:
+            nelem *= d
+        b_ax = leaf.ndim - base
+        B = leaf.shape[b_ax]
+        if key in _SEQ_KEYS:
+            W = leaf.shape[b_ax + 1]
+            total += nelem / (B * W) * min(true_len, W) * isz
+        else:
+            total += nelem / B * isz
+
+    jax.tree_util.tree_map_with_path(visit, caches)
+    return math.ceil(total)
 
 
 def cache_logical_axes(cfg, sig, kv_seq_sharded: bool) -> dict:

@@ -1,7 +1,9 @@
 from repro.serving.client import ClosedLoopClient, run_closed_loop
-from repro.serving.engine import ServingEngine
+from repro.serving.disagg import DisaggregatedEngine, make_pod_mesh
+from repro.serving.engine import DecodePool, PrefillArtifact, ServingEngine
 from repro.serving.gateway import Gateway
 from repro.serving.request import Request, Response
 
-__all__ = ["ServingEngine", "Gateway", "Request", "Response",
-           "ClosedLoopClient", "run_closed_loop"]
+__all__ = ["ServingEngine", "DisaggregatedEngine", "DecodePool",
+           "PrefillArtifact", "Gateway", "Request", "Response",
+           "ClosedLoopClient", "run_closed_loop", "make_pod_mesh"]

@@ -7,6 +7,21 @@ drives full configs on TPU). Transport and copy-engine stage times come from
 the calibrated TransportProfile so a request's end-to-end record composes
 measured compute with modeled wires, exactly like the paper's Table I.
 
+The engine is two separable stages:
+
+* **Admission + prefill** (this class): the request queue, priority pick,
+  bucketed/exact prefill, and per-request records. Prefill produces a
+  :class:`PrefillArtifact` — the max_seq-grown cache plus per-row slot
+  metadata — which is everything a decode stage needs to take over a
+  request.
+* **Decode slot pool** (:class:`DecodePool`): slot occupancy, the ring KV
+  pool, the per-slot device decode state, the jitted splice and decode
+  step, and the async in-flight window. It knows nothing about transports
+  or records, so a FOREIGN artifact — one produced on a different mesh pod
+  and moved through ``core.transfer.kv_transfer`` — splices through the
+  same entry point (see serving/disagg.py, which overrides the
+  :meth:`ServingEngine._handoff` seam between the two stages).
+
 Fast path (the serving hot loop, rebuilt for throughput):
 
 * **Bucketed prefill** — prompts are right-padded to power-of-two length
@@ -17,7 +32,7 @@ Fast path (the serving hot loop, rebuilt for throughput):
   count is O(log max_seq) instead of O(distinct prompt lengths), and an
   admission burst is a single device dispatch.
 * **Device-resident decode loop** — argmax sampling, EOS detection, per-slot
-  done flags, and length updates all live inside one jitted ``decode_step``
+  done flags, and length updates all live inside one jitted decode step
   that returns a device-side ``done`` mask. The host never syncs per token:
   up to ``inflight`` steps are dispatched ahead and each step's tokens+done
   arrive in one host transfer at harvest time. The KV pool is donated
@@ -67,6 +82,141 @@ class _InFlight:
     slots: tuple  # Request-or-None per slot, snapshotted at dispatch
 
 
+@dataclasses.dataclass
+class PrefillArtifact:
+    """Everything a prefill stage must deliver to a decode slot pool.
+
+    Row j of every per-row array belongs to ``reqs[j]``; padding rows carry
+    slot index == max_batch, which is out of bounds for the splice scatter
+    and therefore dropped. ``caches`` is already grown to the pool's ring
+    width (max_seq), so the splice sees one fixed shape.
+    """
+
+    caches: object  # cache tree, ring dim grown to max_seq
+    slot_idx: np.ndarray  # [npad] int32 host-side (OOB => dummy row)
+    lengths: jax.Array  # [npad] true prompt lengths
+    next_tokens: jax.Array  # [npad] greedy first token per row
+    max_new: jax.Array  # [npad] per-request token budget
+    reqs: list  # the real requests (row-aligned prefix)
+    slots: list  # pool slot per request
+
+
+class DecodePool:
+    """Decode-side slot pool, separable from admission/prefill.
+
+    Owns slot occupancy, the ring KV pool, the per-slot device decode state
+    (tokens/lengths/gen/done/max_new), the jitted splice and decode step,
+    and the async in-flight window. A local prefill stage and a remote pod
+    handing a cache off through ``core.transfer`` splice through the same
+    :meth:`splice` entry point.
+    """
+
+    def __init__(self, model: Model, *, max_batch: int, max_seq: int,
+                 eos_token: Optional[int], inflight: int):
+        self.model = model
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.inflight = inflight
+        self.slots: list[Optional[Request]] = [None] * max_batch
+        self.caches = model.init_cache(max_batch, max_seq)
+        self.lengths = jnp.zeros((max_batch,), jnp.int32)
+        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.gen = jnp.zeros((max_batch,), jnp.int32)
+        self.maxn = jnp.zeros((max_batch,), jnp.int32)
+        self.done = jnp.ones((max_batch,), bool)
+        self.eos_arr = jnp.int32(eos_token if eos_token is not None else -1)
+        self.window: deque[_InFlight] = deque()
+        self._step_jit = jax.jit(self._step_impl, donate_argnums=(1,))
+        self._splice_jit = jax.jit(self._splice_impl, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------ #
+    # jitted bodies
+    # ------------------------------------------------------------------ #
+    def _step_impl(self, params, caches, tokens, lengths, gen, maxn, done,
+                   eos):
+        """One whole-batch decode step, sampling and stop logic on device.
+
+        Frozen (done/empty) slots keep their token and length so their ring
+        slot stays put; their lane still flows through the batched compute
+        (the output is discarded), which is what keeps the loop shape-stable.
+        """
+        active = ~done
+        logits, caches, lengths2 = self.model.decode_step(
+            params, caches, tokens, lengths
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        next_tok = jnp.where(active, next_tok, tokens[:, 0])
+        gen = gen + active.astype(jnp.int32)
+        done = done | (gen >= maxn) | (active & (next_tok == eos))
+        lengths = jnp.where(active, lengths2, lengths)
+        return next_tok[:, None], caches, lengths, gen, done
+
+    def _splice_impl(self, pool, group, slots, true_lens, next_toks, maxn_new,
+                     lengths, tokens, gen, done, maxn):
+        """Scatter a (max_seq-grown) prefill cache into ``slots``, updating
+        all per-slot decode state in the same dispatch.
+
+        Dummy rows (batch padding) carry slot index == max_batch, which is
+        out of bounds: JAX scatters drop OOB updates, so they vanish without
+        a separate code path or extra compile.
+        """
+        out = {}
+        for gi, g in enumerate(self.model.groups):
+            stacked = g.count > 1
+
+            def leaf(p, n, _stacked=stacked):
+                if _stacked:  # [L, B, ...] pool, [L, N, ...] group
+                    return p.at[:, slots].set(n.astype(p.dtype))
+                return p.at[slots].set(n.astype(p.dtype))
+
+            out[f"g{gi}"] = jax.tree.map(leaf, pool[f"g{gi}"], group[f"g{gi}"])
+        lengths = lengths.at[slots].set(true_lens)
+        tokens = tokens.at[slots, 0].set(next_toks)
+        gen = gen.at[slots].set(1)
+        # the prefill token may already exhaust the budget (max_new=1):
+        # such slots start done so decode never advances them
+        done = done.at[slots].set(maxn_new <= 1)
+        maxn = maxn.at[slots].set(maxn_new)
+        return out, lengths, tokens, gen, done, maxn
+
+    # ------------------------------------------------------------------ #
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    @property
+    def all_free(self) -> bool:
+        return all(s is None for s in self.slots)
+
+    @property
+    def done_mask(self) -> np.ndarray:
+        """Host copy of the device-side per-slot done flags."""
+        return np.asarray(self.done)
+
+    def splice(self, art: PrefillArtifact):
+        """Admit a prefill artifact (local or transferred) into the pool."""
+        (self.caches, self.lengths, self.tokens, self.gen, self.done,
+         self.maxn) = self._splice_jit(
+            self.caches, art.caches, jnp.asarray(art.slot_idx), art.lengths,
+            art.next_tokens, art.max_new, self.lengths, self.tokens,
+            self.gen, self.done, self.maxn,
+        )
+
+    def fill_one(self, params) -> bool:
+        """Dispatch one decode step if the in-flight window has room."""
+        if len(self.window) >= self.inflight:
+            return False
+        (self.tokens, self.caches, self.lengths, self.gen,
+         self.done) = self._step_jit(
+            params, self.caches, self.tokens, self.lengths,
+            self.gen, self.maxn, self.done, self.eos_arr,
+        )
+        self.window.append(_InFlight(self.tokens, self.done, tuple(self.slots)))
+        return True
+
+    def pop_oldest(self) -> Optional[_InFlight]:
+        return self.window.popleft() if self.window else None
+
+
 class ServingEngine:
     def __init__(
         self,
@@ -113,19 +263,12 @@ class ServingEngine:
         self.store = ProfileStore()
 
         self.queue: deque[Request] = deque()
-        self.slots: list[Optional[Request]] = [None] * max_batch
-        self.caches = model.init_cache(max_batch, max_seq)
-        self.lengths = jnp.zeros((max_batch,), jnp.int32)
-        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.pool = DecodePool(
+            model, max_batch=max_batch, max_seq=max_seq,
+            eos_token=eos_token, inflight=self.inflight,
+        )
         self._records: dict[int, RequestRecord] = {}
 
-        # device-resident per-slot decode state
-        self._gen = jnp.zeros((max_batch,), jnp.int32)
-        self._maxn = jnp.zeros((max_batch,), jnp.int32)
-        self._done = jnp.ones((max_batch,), bool)
-        self._eos_arr = jnp.int32(eos_token if eos_token is not None else -1)
-
-        self._inflight_q: deque[_InFlight] = deque()
         self._finished_ids: set[int] = set()
         self._prefill_finished: list[Response] = []
         self._t_mark = time.perf_counter()
@@ -137,35 +280,50 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, c, t, l: model.decode_step(p, c, t, l)
         )
-        self._decode_fast = jax.jit(self._decode_step_impl, donate_argnums=(1,))
         self._prefill_bucket_jit = jax.jit(self._prefill_bucket_impl)
         self._prefill_exact_jit = jax.jit(self._prefill_exact_impl)
-        self._admit_jit = jax.jit(self._admit_impl, donate_argnums=(0,))
         self._prefill_shapes: set = set()
         self._prefill_cache = {}  # legacy per-(S, features) jit cache
 
     # ------------------------------------------------------------------ #
-    # jitted bodies
+    # decode-pool delegation (legacy loop + external callers)
     # ------------------------------------------------------------------ #
-    def _decode_step_impl(self, params, caches, tokens, lengths, gen, maxn,
-                          done, eos):
-        """One whole-batch decode step, sampling and stop logic on device.
+    @property
+    def slots(self):
+        return self.pool.slots
 
-        Frozen (done/empty) slots keep their token and length so their ring
-        slot stays put; their lane still flows through the batched compute
-        (the output is discarded), which is what keeps the loop shape-stable.
-        """
-        active = ~done
-        logits, caches, lengths2 = self.model.decode_step(
-            params, caches, tokens, lengths
-        )
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        next_tok = jnp.where(active, next_tok, tokens[:, 0])
-        gen = gen + active.astype(jnp.int32)
-        done = done | (gen >= maxn) | (active & (next_tok == eos))
-        lengths = jnp.where(active, lengths2, lengths)
-        return next_tok[:, None], caches, lengths, gen, done
+    @property
+    def caches(self):
+        return self.pool.caches
 
+    @caches.setter
+    def caches(self, v):
+        self.pool.caches = v
+
+    @property
+    def lengths(self):
+        return self.pool.lengths
+
+    @lengths.setter
+    def lengths(self, v):
+        self.pool.lengths = v
+
+    @property
+    def tokens(self):
+        return self.pool.tokens
+
+    @tokens.setter
+    def tokens(self, v):
+        self.pool.tokens = v
+
+    @property
+    def done_mask(self) -> np.ndarray:
+        """Host copy of the device-side per-slot done flags."""
+        return self.pool.done_mask
+
+    # ------------------------------------------------------------------ #
+    # jitted prefill bodies
+    # ------------------------------------------------------------------ #
     def _prefill_bucket_impl(self, params, tokens, lengths):
         """Padded-bucket prefill + greedy first token, one dispatch.
 
@@ -185,34 +343,6 @@ class ServingEngine:
         logits, caches, lens = self.model.prefill(params, batch)
         caches = kvc.grow_cache(caches, self.max_seq)
         return logits, caches, lens
-
-    def _admit_impl(self, pool, group, slots, true_lens, next_toks, maxn_new,
-                    lengths, tokens, gen, done, maxn):
-        """Scatter a (max_seq-grown) prefill cache into ``slots``, updating
-        all per-slot decode state in the same dispatch.
-
-        Dummy rows (batch padding) carry slot index == max_batch, which is
-        out of bounds: JAX scatters drop OOB updates, so they vanish without
-        a separate code path or extra compile.
-        """
-        out = {}
-        for gi, g in enumerate(self.model.groups):
-            stacked = g.count > 1
-
-            def leaf(p, n, _stacked=stacked):
-                if _stacked:  # [L, B, ...] pool, [L, N, ...] group
-                    return p.at[:, slots].set(n.astype(p.dtype))
-                return p.at[slots].set(n.astype(p.dtype))
-
-            out[f"g{gi}"] = jax.tree.map(leaf, pool[f"g{gi}"], group[f"g{gi}"])
-        lengths = lengths.at[slots].set(true_lens)
-        tokens = tokens.at[slots, 0].set(next_toks)
-        gen = gen.at[slots].set(1)
-        # the prefill token may already exhaust the budget (max_new=1):
-        # such slots start done so decode never advances them
-        done = done.at[slots].set(maxn_new <= 1)
-        maxn = maxn.at[slots].set(maxn_new)
-        return out, lengths, tokens, gen, done, maxn
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request, now: Optional[float] = None):
@@ -238,26 +368,40 @@ class ServingEngine:
         self.queue.append(req)
 
     def _free_slots(self):
-        return [i for i, s in enumerate(self.slots) if s is None]
+        return self.pool.free_slots()
 
     @property
     def prefill_compile_count(self) -> int:
         """Distinct prefill shapes compiled so far (bucketed + exact)."""
         return len(self._prefill_shapes) + len(self._prefill_cache)
 
-    @property
-    def done_mask(self) -> np.ndarray:
-        """Host copy of the device-side per-slot done flags."""
-        return np.asarray(self._done)
-
     def _bucket(self, s: int) -> int:
         return min(max(_next_pow2(s), self.min_bucket), self.max_seq)
+
+    # ------------------------------------------------------------------ #
+    # Stage seams (overridden by the disaggregated tier)
+    # ------------------------------------------------------------------ #
+    def _handoff(self, art: PrefillArtifact):
+        """Hook between prefill and the decode-pool splice.
+
+        The single-node engine is a no-op. The disaggregated tier moves
+        ``art`` across the mesh pod boundary here and returns the handoff
+        wall seconds alongside, so the caller charges that time to the
+        'transfer' stage instead of 'preprocess'.
+        """
+        return art, 0.0
+
+    def _ttft_adjust(self, rec: RequestRecord) -> float:
+        """Modeled latency folded into ttft/total beyond the measured stamps
+        (the disagg tier swaps the measured handoff wall for the
+        profile-modeled hop on host-device runs)."""
+        return 0.0
 
     # ------------------------------------------------------------------ #
     # Admission
     # ------------------------------------------------------------------ #
     def _admit(self):
-        free = self._free_slots()
+        free = self.pool.free_slots()
         if not self.queue or not free:
             return
         order = sorted(
@@ -307,9 +451,12 @@ class ServingEngine:
         next_toks, cache1, lens_d = self._prefill_bucket_jit(
             self.params, jnp.asarray(toks), jnp.asarray(lens)
         )
-        self._splice(cache1, slot_idx, lens_d, next_toks, jnp.asarray(maxn))
-        toks_host = np.asarray(next_toks)  # blocks: prefill timing fence
-        dt = time.perf_counter() - t0
+        art = PrefillArtifact(cache1, slot_idx, lens_d, next_toks,
+                              jnp.asarray(maxn), reqs, list(slots))
+        art, t_xfer = self._handoff(art)  # disagg: pod-boundary KV handoff
+        self.pool.splice(art)
+        toks_host = np.asarray(art.next_tokens)  # blocks: prefill timing fence
+        dt = max(time.perf_counter() - t0 - t_xfer, 0.0)
         self._prefill_shapes.add(("bucket", L))
         now = time.perf_counter()
         for j, (req, slot) in enumerate(zip(reqs, slots)):
@@ -329,11 +476,14 @@ class ServingEngine:
         t0 = time.perf_counter()
         logits, cache1, lengths1 = self._prefill_exact_jit(self.params, batch)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        slot_idx = np.asarray([slot], np.int32)
-        self._splice(cache1, slot_idx, lengths1, next_tok,
-                     jnp.asarray([req.max_new_tokens], jnp.int32))
-        tok_host = int(np.asarray(next_tok)[0])
-        dt = time.perf_counter() - t0
+        art = PrefillArtifact(
+            cache1, np.asarray([slot], np.int32), lengths1, next_tok,
+            jnp.asarray([req.max_new_tokens], jnp.int32), [req], [slot],
+        )
+        art, t_xfer = self._handoff(art)
+        self.pool.splice(art)
+        tok_host = int(np.asarray(art.next_tokens)[0])
+        dt = max(time.perf_counter() - t0 - t_xfer, 0.0)
         self._prefill_shapes.add(
             ("exact", toks.shape[1],
              None if req.features is None else np.shape(req.features))
@@ -357,39 +507,24 @@ class ServingEngine:
                 self._finish(req, self._records[req.request_id])
             )
             return
-        self.slots[slot] = req
-
-    def _splice(self, cache1, slot_idx, lens_d, next_toks, maxn):
-        (self.caches, self.lengths, self.tokens, self._gen, self._done,
-         self._maxn) = self._admit_jit(
-            self.caches, cache1, jnp.asarray(slot_idx), lens_d, next_toks,
-            maxn, self.lengths, self.tokens, self._gen, self._done, self._maxn,
-        )
+        self.pool.slots[slot] = req
 
     # ------------------------------------------------------------------ #
     # Decode: async dispatch window + single-transfer harvest
     # ------------------------------------------------------------------ #
     def _dispatch(self):
-        if all(s is None for s in self.slots):
+        if self.pool.all_free:
             return
-        if not self._inflight_q:
+        if not self.pool.window:
             # pipeline (re)start: don't charge idle time to "inference"
             self._t_mark = time.perf_counter()
-        while len(self._inflight_q) < self.inflight:
-            (self.tokens, self.caches, self.lengths, self._gen,
-             self._done) = self._decode_fast(
-                self.params, self.caches, self.tokens, self.lengths,
-                self._gen, self._maxn, self._done, self._eos_arr,
-            )
-            self._inflight_q.append(
-                _InFlight(self.tokens, self._done, tuple(self.slots))
-            )
+        while self.pool.fill_one(self.params):
             self.decode_steps += 1
 
     def _harvest(self) -> list[Response]:
-        if not self._inflight_q:
+        e = self.pool.pop_oldest()
+        if e is None:
             return []
-        e = self._inflight_q.popleft()
         toks, _done = jax.device_get((e.tokens, e.done))  # one host transfer
         now = time.perf_counter()
         dt = max(now - self._t_mark, 0.0)
@@ -412,13 +547,13 @@ class ServingEngine:
             if finished:
                 done.append(self._finish(req, rec))
                 self._finished_ids.add(req.request_id)
-                if self.slots[i] is req:
-                    self.slots[i] = None
+                if self.pool.slots[i] is req:
+                    self.pool.slots[i] = None
         if done and self._finished_ids:
             # ids only matter while an in-flight snapshot still references
             # them — prune so the set stays O(max_batch * inflight)
             live_ids = {
-                r.request_id for ent in self._inflight_q
+                r.request_id for ent in self.pool.window
                 for r in ent.slots if r is not None
             }
             self._finished_ids &= live_ids
@@ -429,13 +564,14 @@ class ServingEngine:
         rec.add("response", rsp_wire)
         if self.transport.uses_copy_engine:
             rec.add("copy_out", self.profile.copy_time(rec.bytes_out))
-        rec.t_done = time.perf_counter() + rsp_wire
+        adj = self._ttft_adjust(rec)
+        rec.t_done = time.perf_counter() + rsp_wire + adj
         req.t_done = rec.t_done
         self.store.add(rec)
         return Response(
             request_id=req.request_id,
             tokens=list(req.generated),
-            ttft_s=req.t_first_token - req.t_arrival,
+            ttft_s=req.t_first_token - req.t_arrival + adj,
             total_s=rec.t_done - rec.t_issue,
             stage_s=dict(rec.stage_s),
         )
@@ -463,8 +599,8 @@ class ServingEngine:
         out = []
         for _ in range(max_steps):
             out.extend(self.step())
-            if (not self.queue and all(s is None for s in self.slots)
-                    and not self._inflight_q):
+            if (not self.queue and self.pool.all_free
+                    and not self.pool.window):
                 break
         return out
 
@@ -512,7 +648,7 @@ class ServingEngine:
         next_tok = int(jnp.argmax(logits[0]))
         self.tokens = self.tokens.at[slot, 0].set(next_tok)
         req.generated.append(next_tok)
-        self.slots[slot] = req
+        self.pool.slots[slot] = req
         req.t_first_token = time.perf_counter()
 
     def _admit_legacy(self):
@@ -530,7 +666,7 @@ class ServingEngine:
         path finishes such requests at prefill time instead.
         """
         self._admit_legacy()
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        active = [i for i, s in enumerate(self.pool.slots) if s is not None]
         if not active:
             return []
         t0 = time.perf_counter()
@@ -546,7 +682,7 @@ class ServingEngine:
 
         done: list[Response] = []
         for i in active:
-            req = self.slots[i]
+            req = self.pool.slots[i]
             rec = self._records[req.request_id]
             rec.add("inference", dt / max(len(active), 1))
             tok = int(next_tokens[i])
@@ -556,5 +692,5 @@ class ServingEngine:
             )
             if finished:
                 done.append(self._finish(req, rec))
-                self.slots[i] = None
+                self.pool.slots[i] = None
         return done

@@ -31,9 +31,17 @@ class Gateway:
     def step(self):
         done = self.engine.step()
         for rsp in done:
-            hop = self.profile.wire_time(self.first_hop, 4 * len(rsp.tokens))
+            nbytes = 4 * len(rsp.tokens)
+            hop = self.profile.wire_time(self.first_hop, nbytes)
             rsp.stage_s["response"] = rsp.stage_s.get("response", 0.0) + hop + self.overhead
             rsp.total_s += hop + self.overhead
+            if self.first_hop is Transport.TCP:
+                # TCP keeps the CPU on the data path on BOTH hops (paper
+                # Fig. 9) — charge the response hop symmetrically with
+                # ``submit``'s request hop.
+                rec = self._records.get(rsp.request_id)
+                if rec is not None:
+                    rec.cpu_s += nbytes * self.profile.tcp_cpu_per_byte
         return done
 
     @property

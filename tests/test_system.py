@@ -57,6 +57,40 @@ def test_gateway_adds_first_hop(model_bank):
     assert rec.stage_s["request"] > 0
 
 
+def test_gateway_charges_response_cpu_symmetrically():
+    """TCP keeps the CPU on the data path on BOTH hops (paper Fig. 9): the
+    response hop must charge tcp_cpu_per_byte exactly like ``submit``'s
+    request hop — the pre-fix gateway silently dropped response-side CPU."""
+    from repro.core.profiler import RequestRecord
+    from repro.core.transport import PAPER_A2
+    from repro.serving.request import Request, Response
+
+    class _FakeEngine:
+        def __init__(self):
+            self._records = {}
+            self.queue = []
+            self.store = None
+
+        def submit(self, req, now):
+            self._records[req.request_id] = RequestRecord(
+                request_id=req.request_id, client_id=0,
+                bytes_in=req.payload_bytes, bytes_out=0,
+            )
+
+        def step(self):
+            rid = next(iter(self._records))
+            return [Response(request_id=rid, tokens=[1, 2, 3], ttft_s=0.0,
+                             total_s=0.0, stage_s={})]
+
+    gw = Gateway(_FakeEngine(), first_hop=Transport.TCP)
+    req = Request(prompt_tokens=np.zeros(10, np.int32))
+    gw.submit(req, 0.0)
+    done = gw.step()
+    rec = gw._records[req.request_id]
+    want = (req.payload_bytes + 4 * len(done[0].tokens)) * PAPER_A2.tcp_cpu_per_byte
+    assert rec.cpu_s == pytest.approx(want, rel=1e-12)
+
+
 @pytest.mark.slow
 def test_training_loss_decreases_and_checkpoints():
     from repro.models import Model

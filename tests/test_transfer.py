@@ -1,0 +1,144 @@
+"""Transfer-layer numerics and accounting: round-trips for all three
+TransferModes, per-source-pod quantization scales, wire-byte counts across
+mixed-dtype cache trees, and the per-request cache-prefix byte helper.
+
+Round-trips run on the 1-pod degenerate mesh (one CPU device — the pod
+permute is an identity ring), which still executes the full quantize /
+permute / dequantize path; CI's 8-device smoke covers the real 2-pod
+collective."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import transfer as tr
+from repro.core.transfer import TransferMode
+from repro.models import kvcache as kvc
+
+
+def pod1_mesh():
+    return Mesh(np.asarray(jax.devices()[:1]), ("pod",))
+
+
+def _tiled_tree(rng, npods=1):
+    """Pod-tiled cache-like tree with float payload + int32 slot metadata."""
+    k = rng.normal(size=(npods, 2, 8, 2, 4)).astype(np.float32) * 3.0
+    v = rng.normal(size=(npods, 2, 8, 2, 4)).astype(np.float32)
+    lens = rng.integers(0, 8, size=(npods, 2)).astype(np.int32)
+    return {"k": jnp.asarray(k), "v": jnp.asarray(v),
+            "meta": {"lengths": jnp.asarray(lens)}}
+
+
+# --------------------------------------------------------------------------- #
+# Numeric round-trips per mechanism
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize(
+    "mode", [TransferMode.DIRECT_HBM, TransferMode.DIRECT_DMA]
+)
+def test_direct_modes_roundtrip_bit_exact(mode, rng):
+    tree = _tiled_tree(rng)
+    moved = tr.kv_transfer(tree, pod1_mesh(), mode=mode)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(moved)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_host_staged_fp_within_int8_tolerance_ints_exact(rng):
+    tree = _tiled_tree(rng)
+    moved = tr.kv_transfer(tree, pod1_mesh(), mode=TransferMode.HOST_STAGED)
+    # slot metadata must cross unquantized, bit-exact
+    np.testing.assert_array_equal(
+        np.asarray(moved["meta"]["lengths"]),
+        np.asarray(tree["meta"]["lengths"]),
+    )
+    for key in ("k", "v"):
+        a, b = np.asarray(tree[key]), np.asarray(moved[key])
+        tol = np.abs(a).max() / 127.0  # one int8 quantization step
+        np.testing.assert_allclose(b, a, atol=tol + 1e-6)
+
+
+def test_host_staged_small_magnitude_reconstruction(rng):
+    """Dequantization error must track the LEAF's own scale, not some global
+    maximum — 0.01-magnitude data reconstructs to ~1e-4 absolute error."""
+    x = {"k": jnp.asarray(rng.normal(size=(1, 4, 8)).astype(np.float32)) * 0.01}
+    moved = tr.kv_transfer(x, pod1_mesh(), mode=TransferMode.HOST_STAGED)
+    a, b = np.asarray(x["k"]), np.asarray(moved["k"])
+    np.testing.assert_allclose(b, a, atol=np.abs(a).max() / 127 + 1e-9)
+
+
+def test_pod_scales_are_per_source_pod():
+    """Pod 0 holds unit-scale data, pod 1 holds 1000x data: pod 0's int8
+    scale must NOT see pod 1's shard (the pre-fix global-max scale would
+    blow pod 0's quantization step up 1000x)."""
+    x = jnp.stack([jnp.linspace(-1.0, 1.0, 16),
+                   1000.0 * jnp.linspace(-1.0, 1.0, 16)])
+    s = np.asarray(tr._pod_scales(x))
+    assert s.shape == (2,)
+    np.testing.assert_allclose(s[0], 1.0 / 127.0, rtol=1e-5)
+    np.testing.assert_allclose(s[1], 1000.0 / 127.0, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# Wire-byte accounting
+# --------------------------------------------------------------------------- #
+def test_transfer_bytes_counts_actual_itemsize_mixed_dtypes():
+    """HOST_STAGED permutes float leaves as int8 (+ a per-pod fp32 scale)
+    but integer leaves at FULL width — the pre-fix count charged 1
+    byte/element for every leaf, undercounting int32 metadata 4x."""
+    tiled = {
+        "k": jnp.zeros((2, 3, 4), jnp.bfloat16),  # 12 elem/pod, quantized
+        "lengths": jnp.zeros((2, 5), jnp.int32),  # 5 elem/pod, full width
+        "q8": jnp.zeros((2, 7), jnp.int8),  # 7 elem/pod, full width
+    }
+    full = 12 * 2 + 5 * 4 + 7 * 1
+    assert tr.transfer_bytes(tiled, TransferMode.DIRECT_HBM) == full
+    assert tr.transfer_bytes(tiled, TransferMode.DIRECT_DMA) == full
+    staged = 12 * 1 + 4 + 5 * 4 + 7 * 1  # int8 payload + scale; ints full
+    assert tr.transfer_bytes(tiled, TransferMode.HOST_STAGED) == staged
+
+
+def test_payload_wire_bytes_matches_tiled_accounting():
+    payload = {"k": jnp.zeros((3, 4), jnp.bfloat16),
+               "m": jnp.zeros((5,), jnp.int32)}
+    tiled = tr.pod_tile(payload, 2, 0)
+    for mode in TransferMode:
+        assert (tr.payload_wire_bytes(payload, mode)
+                == tr.transfer_bytes(tiled, mode))
+
+
+def test_pod_tile_take_roundtrip():
+    payload = {"a": jnp.arange(6).reshape(2, 3)}
+    tiled = tr.pod_tile(payload, 3, src=1)
+    assert jax.tree.leaves(tiled)[0].shape == (3, 2, 3)
+    np.testing.assert_array_equal(
+        np.asarray(tr.pod_take(tiled, 1)["a"]), np.asarray(payload["a"])
+    )
+    assert np.asarray(tr.pod_take(tiled, 0)["a"]).sum() == 0
+
+
+# --------------------------------------------------------------------------- #
+# Per-request cache-prefix bytes (what a disagg handoff charges one request)
+# --------------------------------------------------------------------------- #
+def test_request_cache_nbytes_mixed_tree():
+    caches = {"g0": {
+        "l0": {"k": jnp.zeros((2, 8, 2, 4), jnp.bfloat16),
+               "v": jnp.zeros((2, 8, 2, 4), jnp.bfloat16)},
+        "l1": {"conv": jnp.zeros((2, 3, 5), jnp.float32),
+               "state": jnp.zeros((2, 2, 4, 3), jnp.float32)},
+    }}
+    # k/v per-token per-seq: 2*4 elem * 2B = 16B each; conv/state static
+    # per-seq: 15*4=60B and 24*4=96B
+    assert kvc.request_cache_nbytes(caches, 5) == 5 * 16 * 2 + 60 + 96
+    # ring cap: true_len clamps at W=8
+    assert kvc.request_cache_nbytes(caches, 99) == 8 * 16 * 2 + 60 + 96
+    # wire-format override (int8 host staging)
+    assert kvc.request_cache_nbytes(
+        caches, 5, itemsize=lambda l: 1
+    ) == 5 * 8 * 2 + 15 + 24
+
+
+def test_request_cache_nbytes_scan_stacked():
+    # stacked [L, B, W, H, hd]: the layer dim multiplies per-token bytes
+    caches = {"g0": {"l0": {"k": jnp.zeros((3, 2, 8, 2, 4), jnp.float32)}}}
+    assert kvc.request_cache_nbytes(caches, 4) == 4 * (3 * 2 * 4) * 4
