@@ -83,6 +83,12 @@ def init_layer_cache(cfg, sig, B, W, enc_len=0, dtype=jnp.bfloat16):
 _SEQ_KEYS = ("k", "v", "ckv", "krope")
 
 
+def _leaf_key(path) -> str:
+    """Cache-entry key ('k', 'conv', ...) from a tree_map_with_path path."""
+    last = path[-1]
+    return last.key if hasattr(last, "key") else str(last)
+
+
 def grow_cache(caches, new_w: int):
     """Pad the ring dimension of a prefill cache so decode can append.
 
@@ -91,7 +97,7 @@ def grow_cache(caches, new_w: int):
     """
 
     def grow(path, leaf):
-        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        key = _leaf_key(path)
         if key not in _SEQ_KEYS:
             return leaf
         axis = leaf.ndim - 3 if key in ("k", "v") else leaf.ndim - 2
@@ -111,6 +117,56 @@ _BASE_NDIM = {"k": 4, "v": 4, "xk": 4, "xv": 4, "ckv": 3, "krope": 3,
               "conv": 3, "state": 4}
 
 
+def slice_cache(caches, n_rows: int, prefix_len: int):
+    """Slice a pooled/padded cache tree down to its valid extent.
+
+    Keeps the first ``n_rows`` batch rows of every leaf and, for ring-dim
+    (seq-keyed) leaves, the first ``prefix_len`` ring slots — both clamped
+    to the leaf's actual extent. Static per-row leaves (SSM conv/state,
+    cross-attn xk/xv) keep their full payload; scan-stacked leading layer
+    axes are untouched. This is what a disaggregated handoff should put on
+    the wire: the prefill's valid KV prefix, not the max_batch x max_seq
+    pool padding (ring semantics write prefill tokens at slots
+    ``[0, true_len)``, so a ``prefix_len >= max true_len`` slice loses
+    nothing). The inverse is :func:`pad_cache_rows` + :func:`grow_cache`
+    on the far side.
+    """
+
+    def visit(path, leaf):
+        key = _leaf_key(path)
+        base = _BASE_NDIM.get(key)
+        if base is None:
+            return leaf
+        b_ax = leaf.ndim - base
+        idx = [slice(None)] * leaf.ndim
+        idx[b_ax] = slice(0, min(n_rows, leaf.shape[b_ax]))
+        if key in _SEQ_KEYS:
+            idx[b_ax + 1] = slice(0, min(prefix_len, leaf.shape[b_ax + 1]))
+        return leaf[tuple(idx)]
+
+    return jax.tree_util.tree_map_with_path(visit, caches)
+
+
+def pad_cache_rows(caches, n_rows: int):
+    """Zero-pad the batch dim of a (row-sliced) cache tree back to
+    ``n_rows`` — the row inverse of :func:`slice_cache`; the ring dim is
+    grown separately by :func:`grow_cache`."""
+
+    def visit(path, leaf):
+        key = _leaf_key(path)
+        base = _BASE_NDIM.get(key)
+        if base is None:
+            return leaf
+        b_ax = leaf.ndim - base
+        if leaf.shape[b_ax] >= n_rows:
+            return leaf
+        pad = [(0, 0)] * leaf.ndim
+        pad[b_ax] = (0, n_rows - leaf.shape[b_ax])
+        return jnp.pad(leaf, pad)
+
+    return jax.tree_util.tree_map_with_path(visit, caches)
+
+
 def request_cache_nbytes(caches, true_len: int, *, itemsize=None) -> int:
     """Bytes of ONE sequence's live cache in a pooled/padded tree.
 
@@ -125,7 +181,7 @@ def request_cache_nbytes(caches, true_len: int, *, itemsize=None) -> int:
 
     def visit(path, leaf):
         nonlocal total
-        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        key = _leaf_key(path)
         base = _BASE_NDIM.get(key)
         if base is None:
             return

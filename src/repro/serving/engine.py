@@ -90,6 +90,13 @@ class PrefillArtifact:
     slot index == max_batch, which is out of bounds for the splice scatter
     and therefore dropped. ``caches`` is already grown to the pool's ring
     width (max_seq), so the splice sees one fixed shape.
+
+    ``n_rows``/``prefix_len`` record the artifact's VALID extent — the
+    occupied leading rows and the max true cache length among them (prompt
+    tokens, plus feature frames on the vlm/audio exact path) — so a
+    pod-boundary handoff can move only the live KV prefix
+    (``kvcache.slice_cache``) instead of the padded admission tree, and
+    grow back to the pool shape on the far side.
     """
 
     caches: object  # cache tree, ring dim grown to max_seq
@@ -99,6 +106,8 @@ class PrefillArtifact:
     max_new: jax.Array  # [npad] per-request token budget
     reqs: list  # the real requests (row-aligned prefix)
     slots: list  # pool slot per request
+    n_rows: int = 0  # occupied leading rows (== len(reqs))
+    prefix_len: int = 0  # max true cache length among occupied rows
 
 
 class DecodePool:
@@ -452,7 +461,8 @@ class ServingEngine:
             self.params, jnp.asarray(toks), jnp.asarray(lens)
         )
         art = PrefillArtifact(cache1, slot_idx, lens_d, next_toks,
-                              jnp.asarray(maxn), reqs, list(slots))
+                              jnp.asarray(maxn), reqs, list(slots),
+                              n_rows=n, prefix_len=int(lens.max()))
         art, t_xfer = self._handoff(art)  # disagg: pod-boundary KV handoff
         self.pool.splice(art)
         toks_host = np.asarray(art.next_tokens)  # blocks: prefill timing fence
@@ -476,9 +486,16 @@ class ServingEngine:
         t0 = time.perf_counter()
         logits, cache1, lengths1 = self._prefill_exact_jit(self.params, batch)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # feature frames (vlm) prepend to the token sequence, so the cache's
+        # true length is frames + prompt — len(prompt_tokens) alone would
+        # let a pod handoff slice live KV off the wire. Derived host-side
+        # (no device sync on the single-node hot path); the disagg feature
+        # regression test pins it against the model-returned lengths.
+        frames = 0 if req.features is None else int(np.shape(req.features)[-2])
         art = PrefillArtifact(
             cache1, np.asarray([slot], np.int32), lengths1, next_tok,
             jnp.asarray([req.max_new_tokens], jnp.int32), [req], [slot],
+            n_rows=1, prefix_len=len(req.prompt_tokens) + frames,
         )
         art, t_xfer = self._handoff(art)
         self.pool.splice(art)
@@ -562,16 +579,25 @@ class ServingEngine:
     def _finish(self, req: Request, rec: RequestRecord) -> Response:
         rsp_wire = self.profile.wire_time(self.transport, rec.bytes_out)
         rec.add("response", rsp_wire)
+        egress = rsp_wire
         if self.transport.uses_copy_engine:
-            rec.add("copy_out", self.profile.copy_time(rec.bytes_out))
+            copy_out = self.profile.copy_time(rec.bytes_out)
+            rec.add("copy_out", copy_out)
+            egress += copy_out
+        # the modeled ingress stages (request wire + copy_in) were charged
+        # to stage_s at submit but never reached the latency stamps, while
+        # the egress wire was folded into total only — include BOTH hops
+        # symmetrically so total_s >= sum(stage_s) holds end to end
+        ingress = (rec.stage_s.get("request", 0.0)
+                   + rec.stage_s.get("copy_in", 0.0))
         adj = self._ttft_adjust(rec)
-        rec.t_done = time.perf_counter() + rsp_wire + adj
+        rec.t_done = time.perf_counter() + ingress + egress + adj
         req.t_done = rec.t_done
         self.store.add(rec)
         return Response(
             request_id=req.request_id,
             tokens=list(req.generated),
-            ttft_s=req.t_first_token - req.t_arrival + adj,
+            ttft_s=req.t_first_token - req.t_arrival + ingress + adj,
             total_s=rec.t_done - rec.t_issue,
             stage_s=dict(rec.stage_s),
         )

@@ -32,15 +32,23 @@ class Gateway:
         done = self.engine.step()
         for rsp in done:
             nbytes = 4 * len(rsp.tokens)
-            hop = self.profile.wire_time(self.first_hop, nbytes)
-            rsp.stage_s["response"] = rsp.stage_s.get("response", 0.0) + hop + self.overhead
-            rsp.total_s += hop + self.overhead
-            if self.first_hop is Transport.TCP:
-                # TCP keeps the CPU on the data path on BOTH hops (paper
-                # Fig. 9) — charge the response hop symmetrically with
-                # ``submit``'s request hop.
-                rec = self._records.get(rsp.request_id)
-                if rec is not None:
+            hop = self.profile.wire_time(self.first_hop, nbytes) + self.overhead
+            rsp.stage_s["response"] = rsp.stage_s.get("response", 0.0) + hop
+            rsp.total_s += hop
+            rec = self._records.get(rsp.request_id)
+            if rec is not None:
+                # charge the STORED record symmetrically with ``submit``'s
+                # request hop: the returned Response alone would leave
+                # ProfileStore under-reporting gateway deployments
+                # (stage_s["response"] short one hop, t_done stale).
+                # Request.t_done keeps the ENGINE-side completion stamp —
+                # the gateway only sees Responses, so end-to-end time lives
+                # on the record and the Response, not the Request.
+                rec.add("response", hop)
+                rec.t_done += hop
+                if self.first_hop is Transport.TCP:
+                    # TCP keeps the CPU on the data path on BOTH hops
+                    # (paper Fig. 9)
                     rec.cpu_s += nbytes * self.profile.tcp_cpu_per_byte
         return done
 

@@ -206,3 +206,27 @@ def test_ttft_single_clock(model_bank):
     assert len(out) == 1
     assert 0 <= out[0].ttft_s < 60
     assert out[0].total_s > 0
+
+
+def test_e2e_latency_includes_modeled_ingress_and_egress(model_bank):
+    """The modeled ingress stages (request wire + copy_in) charged at submit
+    must reach ttft/total just like the egress stages reach total — the
+    pre-fix engine folded only the response wire in, so
+    ``total_s >= sum(stage_s)`` failed by the ingress (+copy_out) delta."""
+    from repro.core.transport import Transport
+
+    cfg = get_config("llama3-8b").reduced()
+    model, params = model_bank(cfg)
+    eng = ServingEngine(model, params, max_batch=1, max_seq=64,
+                        transport=Transport.RDMA)  # has copy_in AND copy_out
+    req = _requests(cfg, [8], max_new=2)[0]
+    eng.submit(req, time.perf_counter())
+    out = eng.run_until_drained()
+    rec = eng.store.records[0]
+    ingress = rec.stage_s["request"] + rec.stage_s["copy_in"]
+    assert ingress > 0
+    raw_ttft = req.t_first_token - req.t_arrival
+    assert out[0].ttft_s == pytest.approx(raw_ttft + ingress, abs=1e-9)
+    # every charged stage is now inside the end-to-end stamp
+    assert out[0].total_s + 1e-9 >= sum(out[0].stage_s.values())
+    assert rec.t_done == req.t_done

@@ -89,6 +89,37 @@ def test_gateway_charges_response_cpu_symmetrically():
     rec = gw._records[req.request_id]
     want = (req.payload_bytes + 4 * len(done[0].tokens)) * PAPER_A2.tcp_cpu_per_byte
     assert rec.cpu_s == pytest.approx(want, rel=1e-12)
+    # the STORED record must see the response hop exactly like the
+    # returned Response does — the pre-fix gateway updated only rsp, so
+    # ProfileStore under-reported deployments by one hop per request
+    # (stage_s["response"] short, t_done stale)
+    assert rec.stage_s["response"] == pytest.approx(
+        done[0].stage_s["response"], rel=1e-12
+    )
+    assert rec.t_done - rec.t_issue == pytest.approx(
+        done[0].total_s, rel=1e-12
+    )
+
+
+def test_gateway_store_matches_response_on_real_engine(model_bank):
+    """End to end: after a gateway drain, each stored record's response
+    stage and total agree with the Response the client received."""
+    cfg = get_config("llama3-8b").reduced()
+    model, params = model_bank(cfg)
+    eng = ServingEngine(model, params, max_batch=2, max_seq=48,
+                        transport=Transport.GDR)
+    gw = Gateway(eng, first_hop=Transport.TCP)
+    clients = [ClosedLoopClient(0, cfg.vocab_size, prompt_len=8,
+                                max_new_tokens=2)]
+    run_closed_loop(gw, clients, requests_per_client=2)
+    responses = {r.request_id: r for c in clients for r in c.completed}
+    assert responses
+    for rec in eng.store.records:
+        rsp = responses[rec.request_id]
+        assert rec.stage_s["response"] == pytest.approx(
+            rsp.stage_s["response"], rel=1e-12
+        )
+        assert rec.total == pytest.approx(rsp.total_s, rel=1e-9)
 
 
 @pytest.mark.slow

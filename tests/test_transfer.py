@@ -142,3 +142,57 @@ def test_request_cache_nbytes_scan_stacked():
     # stacked [L, B, W, H, hd]: the layer dim multiplies per-token bytes
     caches = {"g0": {"l0": {"k": jnp.zeros((3, 2, 8, 2, 4), jnp.float32)}}}
     assert kvc.request_cache_nbytes(caches, 4) == 4 * (3 * 2 * 4) * 4
+
+
+# --------------------------------------------------------------------------- #
+# Prefix slicing (what a prefix-only handoff puts on the wire)
+# --------------------------------------------------------------------------- #
+def _mixed_tree(rng):
+    return {"g0": {
+        "l0": {"k": jnp.asarray(rng.normal(size=(2, 8, 2, 4)), jnp.float32),
+               "v": jnp.asarray(rng.normal(size=(2, 8, 2, 4)), jnp.float32)},
+        "l1": {"conv": jnp.asarray(rng.normal(size=(2, 3, 5)), jnp.float32),
+               "state": jnp.asarray(rng.normal(size=(2, 2, 4, 3)),
+                                    jnp.float32)},
+    }}
+
+
+def test_slice_cache_ring_vs_static_leaves(rng):
+    """Seq-keyed leaves slice both rows and ring prefix; static per-row
+    leaves (SSM conv/state) slice rows only and keep their full payload."""
+    tree = _mixed_tree(rng)
+    s = kvc.slice_cache(tree, 1, 5)
+    assert s["g0"]["l0"]["k"].shape == (1, 5, 2, 4)
+    assert s["g0"]["l1"]["conv"].shape == (1, 3, 5)
+    assert s["g0"]["l1"]["state"].shape == (1, 2, 4, 3)
+    np.testing.assert_array_equal(
+        np.asarray(s["g0"]["l0"]["k"]),
+        np.asarray(tree["g0"]["l0"]["k"][:1, :5]),
+    )
+    # clamps to the leaf extent rather than over-slicing
+    full = kvc.slice_cache(tree, 99, 999)
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slice_cache_scan_stacked_rows():
+    # stacked [L, B, W, H, hd]: batch/ring axes sit behind the layer dim
+    tree = {"k": jnp.zeros((3, 4, 16, 2, 4), jnp.float32)}
+    assert kvc.slice_cache(tree, 2, 8)["k"].shape == (3, 2, 8, 2, 4)
+
+
+def test_slice_pad_grow_roundtrip(rng):
+    """slice -> pad_cache_rows -> grow_cache restores the pool shape with
+    the valid prefix intact and zeros elsewhere (what the decode side does
+    after the wire)."""
+    tree = _mixed_tree(rng)
+    s = kvc.slice_cache(tree, 1, 5)
+    back = kvc.grow_cache(kvc.pad_cache_rows(s, 2), 8)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert a.shape == b.shape
+    np.testing.assert_array_equal(
+        np.asarray(back["g0"]["l0"]["k"][:1, :5]),
+        np.asarray(tree["g0"]["l0"]["k"][:1, :5]),
+    )
+    assert np.asarray(back["g0"]["l0"]["k"][1:]).sum() == 0
+    assert np.asarray(back["g0"]["l0"]["k"][:, 5:]).sum() == 0
