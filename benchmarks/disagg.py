@@ -20,6 +20,17 @@ short-prompt admission moves a per-row prefix share of the padded
 admission tree the collective used to permute. The monotonicity
 assertions run in the CI --quick smoke.
 
+The warmup sweep runs one engine with ``warmup=True`` (construction
+pre-traces the pow2 bucket + handoff extent grids) and asserts the
+steady-state property: the drain compiles NOTHING — no new prefill
+bucket, no new handoff extent — and its wall undercuts a cold engine's
+first drain, which pays those compiles inline. Also asserted in the CI
+--quick smoke.
+
+Per-pod compute placement is ON (the default): prefill params/compute sit
+on pod 0, the decode pool on the last pod, and the handoff collective is
+the only cross-slice hop. See docs/benchmarks.md for every output field.
+
 Usage: PYTHONPATH=src python -m benchmarks.disagg [--quick] [--out PATH]
 """
 
@@ -118,6 +129,43 @@ def bench_occupancy(model, params, cfg, mesh):
     return out
 
 
+def bench_warmup(model, params, cfg, mesh):
+    """Warmed steady-state: with ``warmup=True`` the engine pre-traces the
+    pow2 bucket grid and every (rows, prefix) handoff extent at
+    construction, so the serving path never compiles — asserted by
+    snapshotting the compile-tracking sets around the drain — and the
+    warmed drain wall undercuts a cold engine's first drain (which pays
+    the same compiles inline)."""
+    from repro.core.transfer import TransferMode
+    from repro.serving import DisaggregatedEngine
+
+    kw = dict(max_batch=4, max_seq=128, transfer_mode=TransferMode.DIRECT_HBM,
+              mesh=mesh, charge="modeled")
+    lens = [7, 23, 55, 100]
+
+    cold = DisaggregatedEngine(model, params, **kw)
+    _, _, cold_wall = run_workload(cold, cfg, lens, max_new=4)
+
+    warm = DisaggregatedEngine(model, params, warmup=True, **kw)
+    extents, buckets = set(warm._xfer_warm), warm.prefill_compile_count
+    _, _, warm_wall = run_workload(warm, cfg, lens, max_new=4)
+    # steady-state walls: the timed drain compiled nothing — no new
+    # handoff extent, no new prefill bucket...
+    assert warm._xfer_warm == extents, "handoff extent compiled in drain"
+    assert warm.prefill_compile_count == buckets, "bucket compiled in drain"
+    # ...so the warmed drain undercuts the cold drain that pays the
+    # bucket/extent compiles inside its wall
+    assert warm_wall < cold_wall, (warm_wall, cold_wall)
+    return {
+        "warm_construction_s": round(warm.warm_s, 3),
+        "extents_pretraced": len(extents),
+        "prefill_buckets_pretraced": buckets,
+        "warm_drain_wall_s": round(warm_wall, 3),
+        "cold_drain_wall_s": round(cold_wall, 3),
+        "steady_state": True,  # asserted above
+    }
+
+
 def bench_disagg(quick: bool):
     import jax
 
@@ -141,10 +189,18 @@ def bench_disagg(quick: bool):
     )
 
     rows = {}
+    placement_info = None
     for mode in TransferMode:
         eng = DisaggregatedEngine(
             model, params, transfer_mode=mode, mesh=mesh, **kw
         )
+        if placement_info is None:  # report what the engines actually run
+            pl = eng.placement
+            placement_info = {
+                "prefill_pods": list(pl.prefill_pods),
+                "decode_pods": list(pl.decode_pods),
+                "disjoint": pl.disjoint,
+            }
         tokens, ttfts, wall = run_workload(eng, cfg, lens, max_new)
         recs = eng.store.records
         charge = sum(r.stage_s.get("transfer", 0.0) for r in recs) / len(recs)
@@ -181,6 +237,10 @@ def bench_disagg(quick: bool):
             "max_new_tokens": max_new, "max_batch": kw["max_batch"],
             "max_seq": kw["max_seq"], "backend": jax.default_backend(),
             "devices": len(jax.devices()), "pods": mesh.shape["pod"],
+            # per-pod compute placement (on by default), read from the
+            # engines' actual PodPlacement: the handoff collective is the
+            # only cross-slice hop
+            "placement": placement_info,
         },
         "single_engine": {
             "wall_s": round(base_wall, 3),
@@ -195,6 +255,9 @@ def bench_disagg(quick: bool):
         # prefix-only handoff: wire bytes follow occupancy x prefix, not
         # pool size (monotonicity asserted inside)
         "occupancy_sweep": bench_occupancy(model, params, cfg, mesh),
+        # warmup=True: extent grid pre-traced, zero compiles in the drain
+        # (steady-state walls asserted inside)
+        "warmup_sweep": bench_warmup(model, params, cfg, mesh),
     }
 
 
@@ -227,6 +290,11 @@ def main():
               f"{m}: {r['occ1_short_vs_padded_tree']:.1%}"
               for m, r in occ.items()
           ))
+    w = result["disagg"]["warmup_sweep"]
+    print(f"# warmup: {w['prefill_buckets_pretraced']} buckets + "
+          f"{w['extents_pretraced']} handoff extents pre-traced in "
+          f"{w['warm_construction_s']}s; steady-state drain "
+          f"{w['warm_drain_wall_s']}s vs cold {w['cold_drain_wall_s']}s")
 
 
 if __name__ == "__main__":

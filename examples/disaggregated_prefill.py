@@ -1,10 +1,13 @@
 """Disaggregated prefill->decode serving: the paper's proxied-connection
 study mapped onto a modern LLM serving pattern (DESIGN.md §2).
 
-Pod 0 runs admission+prefill, pod 1 owns the decode slot pool; each
-admitted request's VALID KV PREFIX (plus its slot metadata) crosses the
-pod boundary through ``core.transfer.kv_transfer`` under the deployment's
-mechanism — DIRECT_HBM = GPUDirect, DIRECT_DMA = RDMA, HOST_STAGED = TCP
+Pod 0 runs admission+prefill, the last pod owns the decode slot pool —
+and with per-pod placement (the default) each stage's params and jitted
+compute are COMMITTED to its own pod slice, so the handoff collective is
+the only cross-slice hop; each admitted request's VALID KV PREFIX (plus
+its slot metadata) crosses the pod boundary through
+``core.transfer.kv_transfer`` under the deployment's mechanism —
+DIRECT_HBM = GPUDirect, DIRECT_DMA = RDMA, HOST_STAGED = TCP
 (int8-requantized with per-source-pod scales). The collective moves only
 the admitted rows sliced to their prefix blocks — not the max_batch x
 max_seq pool tree — and the decode side grows the landed prefix back to
@@ -67,10 +70,17 @@ def main():
           f"{mesh.shape['pod'] - 1})")
     base_tokens, _ = drain(ServingEngine(model, params, **kw), cfg, lens)
 
+    shown = False
     for mode in TransferMode:
         eng = DisaggregatedEngine(
             model, params, transfer_mode=mode, mesh=mesh, **kw
         )
+        if not shown:  # per-pod placement (default): stage -> device slice
+            pl = eng.placement
+            print(f"  placement: prefill on {pl.prefill_devices()}, decode "
+                  f"pool on {pl.decode_devices()} "
+                  f"({'disjoint two-pool split' if pl.disjoint else 'degenerate shared slice'})")
+            shown = True
         tokens, rsps = drain(eng, cfg, lens)
         match = sum(a == b for a, b in zip(tokens, base_tokens)) / len(tokens)
         recs = eng.store.records

@@ -22,6 +22,13 @@ compiles; `transfer_bytes()` feeds the §Roofline collective term, and the
 simulator's profile constants time the same byte counts. The disaggregated
 serving tier (serving/disagg.py) runs the same collective per admission and
 charges `TransportProfile.handoff_time` on the counted bytes.
+
+Under per-pod stage placement the serving tier lays the pod-tiled payload
+out sharded along the 'pod' axis — the live bytes committed to the
+prefill slice, zeros on the decode slice — so the ppermute here is the
+ONLY hop that crosses the two stages' compute boundary (see
+serving/disagg.py and docs/architecture.md). `pod_tile`/`pod_take`
+construct and unpack that [npods, ...] layout.
 """
 
 from __future__ import annotations
@@ -97,6 +104,11 @@ def kv_transfer(caches, mesh, *, mode: TransferMode = TransferMode.DIRECT_HBM,
     :func:`pod_tile`). Integer leaves may ride along as per-request slot
     metadata; they cross unquantized under every mode. perm: [(src, dst)]
     pod pairs; default ring 0->1, 1->0.
+
+    The wire cost of what this permutes is exactly
+    :func:`payload_wire_bytes` of the untiled payload — the reconciliation
+    invariant the serving tier's ``handoff_wire_bytes`` counter is tested
+    against.
     """
     npods = mesh.shape["pod"]
     perm = perm or [(i, (i + 1) % npods) for i in range(npods)]

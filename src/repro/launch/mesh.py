@@ -1,13 +1,29 @@
 """Production meshes. v5e pod = 16x16 = 256 chips; multi-pod = 2 pods.
 
-``make_production_mesh`` is a FUNCTION so importing this module never touches
-jax device state (the dry-run must set XLA_FLAGS before the first jax call).
+Every mesh constructor here is a FUNCTION so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before the first
+jax call). Three mesh families:
+
+* :func:`make_production_mesh` — the full TPU mesh the dry-run/roofline
+  lower against ('pod' x 'data' x 'model' when multi-pod).
+* :func:`make_local_mesh` — single-device stand-in with the same axis
+  names (CPU tests/examples).
+* :func:`make_serving_pod_mesh` — the 1-D ('pod',) mesh the
+  disaggregated serving tier runs on: prefill and decode stages sit on
+  opposite ends of this axis, the KV handoff collective permutes across
+  it, and ``serving.disagg.PodPlacement`` carves per-stage compute
+  slices out of it (via ``sharding.partition.pod_slice_mesh``).
 """
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+import numpy as np
+
+try:  # jax >= 0.5 explicit-sharding API; older jax has no AxisType
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
 
 # TPU v5e hardware constants (per chip) used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
@@ -15,12 +31,35 @@ HBM_BW = 819e9  # B/s
 ICI_BW = 50e9  # B/s per link
 
 
+def _mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_local_mesh():
     """Single-device mesh with the same axis names (CPU tests/examples)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return _mesh((1, 1), ("data", "model"))
+
+
+def make_serving_pod_mesh(npods=None):
+    """('pod',)-axis serving mesh over the first ``npods`` devices.
+
+    Defaults to 2 pods when the backend has at least two devices, else the
+    1-pod degenerate mesh (every collective becomes an identity permute,
+    so the full disaggregated tier still runs in single-device tests).
+    Re-exported as ``repro.serving.make_pod_mesh``.
+    """
+    from jax.sharding import Mesh
+
+    avail = jax.devices()
+    npods = min(2, len(avail)) if npods is None else npods
+    if npods > len(avail):
+        raise ValueError(f"npods {npods} > available devices {len(avail)}")
+    return Mesh(np.asarray(avail[:npods]), ("pod",))

@@ -6,9 +6,28 @@ Cache kinds per layer signature:
   mla        -> {"ckv": [B,W,r], "krope": [B,W,rope]}
   ssm        -> {"conv": [B,K-1,C], "state": [B,nh,hd,ds]}
 
-Ring semantics: slot = length % W. In steady-state decode (dry-run shapes)
-every slot is valid, which also models sliding-window caches exactly
-(W = window).
+Ring semantics: slot = length % W, so a prefill of ``true_len <= W``
+tokens occupies exactly ring slots ``[0, true_len)``. In steady-state
+decode (dry-run shapes) every slot is valid, which also models
+sliding-window caches exactly (W = window).
+
+Shape surgery contract (the serving tier's handoff is built on it; see
+docs/architecture.md):
+
+  slice_cache(c, rows, prefix)      # valid extent only -> the wire
+  pad_cache_rows(. , max_batch)     # row inverse, decode side
+  grow_cache(. , max_seq)           # ring inverse, decode side
+
+``slice_cache`` then ``pad_cache_rows`` + ``grow_cache`` round-trips a
+pooled tree bit-exactly whenever ``prefix >= max true length`` among the
+kept rows (ring writes above never touch slots past ``true_len`` during
+prefill). Seq-keyed leaves (k/v/ckv/krope) ring-slice on their W dim;
+static per-row leaves (SSM conv/state, cross-attn xk/xv) always move in
+full. The serving tier rounds ``rows``/``prefix`` up to powers of two
+(prefix floored at its ``handoff_block`` knob) before calling these, so
+the jitted surgery compiles O(log max_batch x log max_seq) shapes.
+``request_cache_nbytes`` prices ONE row's live prefix for the same tree
+— the per-request "useful bytes" counter.
 """
 
 from __future__ import annotations

@@ -1,9 +1,14 @@
 from repro.serving.client import ClosedLoopClient, run_closed_loop
-from repro.serving.disagg import DisaggregatedEngine, make_pod_mesh
+from repro.serving.disagg import (
+    DisaggregatedEngine,
+    PodPlacement,
+    make_pod_mesh,
+)
 from repro.serving.engine import DecodePool, PrefillArtifact, ServingEngine
 from repro.serving.gateway import Gateway
 from repro.serving.request import Request, Response
 
 __all__ = ["ServingEngine", "DisaggregatedEngine", "DecodePool",
-           "PrefillArtifact", "Gateway", "Request", "Response",
-           "ClosedLoopClient", "run_closed_loop", "make_pod_mesh"]
+           "PrefillArtifact", "PodPlacement", "Gateway", "Request",
+           "Response", "ClosedLoopClient", "run_closed_loop",
+           "make_pod_mesh"]

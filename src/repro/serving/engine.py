@@ -46,6 +46,13 @@ prefill, ``block_until_ready`` + host argmax + per-slot Python bookkeeping
 every token) as the measured A/B baseline for ``benchmarks/serving.py`` and
 the drain-equivalence test.
 
+Because every hot-loop shape is pow2-bounded, ``warmup=True`` can
+pre-trace the whole grid at construction (:meth:`ServingEngine.warm`):
+a warmed engine charges no XLA compile inside any timed serving stage.
+The disaggregated tier extends the same warm pass over its handoff
+extents and additionally commits each stage's params/compute to its own
+mesh pod slice (see serving/disagg.py and docs/architecture.md).
+
 Continuous batching: a fixed pool of ``max_batch`` slots; finished sequences
 free their slot, queued requests join at the next step boundary; every decode
 step runs the whole active batch through one jitted step.
@@ -117,7 +124,9 @@ class DecodePool:
     (tokens/lengths/gen/done/max_new), the jitted splice and decode step,
     and the async in-flight window. A local prefill stage and a remote pod
     handing a cache off through ``core.transfer`` splice through the same
-    :meth:`splice` entry point.
+    :meth:`splice` entry point. :meth:`place` commits the whole pool to a
+    device slice (per-pod placement); :meth:`reset_state` re-zeros it
+    after a construction-time warmup without dropping compiled jits.
     """
 
     def __init__(self, model: Model, *, max_batch: int, max_seq: int,
@@ -127,16 +136,48 @@ class DecodePool:
         self.max_seq = max_seq
         self.inflight = inflight
         self.slots: list[Optional[Request]] = [None] * max_batch
-        self.caches = model.init_cache(max_batch, max_seq)
-        self.lengths = jnp.zeros((max_batch,), jnp.int32)
-        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
-        self.gen = jnp.zeros((max_batch,), jnp.int32)
-        self.maxn = jnp.zeros((max_batch,), jnp.int32)
-        self.done = jnp.ones((max_batch,), bool)
         self.eos_arr = jnp.int32(eos_token if eos_token is not None else -1)
         self.window: deque[_InFlight] = deque()
+        self._sharding = None  # optional committed placement (pod slice)
+        self._init_state()
         self._step_jit = jax.jit(self._step_impl, donate_argnums=(1,))
         self._splice_jit = jax.jit(self._splice_impl, donate_argnums=(0,))
+
+    # every device-state array the pool owns: _init_state (re)builds them
+    # and place() commits them — keep the two in sync through this tuple
+    _STATE_FIELDS = ("caches", "lengths", "tokens", "gen", "maxn", "done",
+                     "eos_arr")
+
+    def _init_state(self):
+        """(Re)build the device-side slot state (the ``_STATE_FIELDS``
+        arrays, minus the constant eos_arr): empty pool, all slots done.
+        Re-placed onto the committed sharding when one is set."""
+        self.caches = self.model.init_cache(self.max_batch, self.max_seq)
+        self.lengths = jnp.zeros((self.max_batch,), jnp.int32)
+        self.tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
+        self.gen = jnp.zeros((self.max_batch,), jnp.int32)
+        self.maxn = jnp.zeros((self.max_batch,), jnp.int32)
+        self.done = jnp.ones((self.max_batch,), bool)
+        if self._sharding is not None:
+            self.place(self._sharding)
+
+    def place(self, sharding):
+        """Commit the pool's entire device state (``_STATE_FIELDS``) to
+        ``sharding`` (a pod slice in the disaggregated tier): every
+        subsequent splice/step jit then compiles for — and provably
+        executes on — exactly that slice's devices, since jit placement
+        follows its committed arguments."""
+        self._sharding = sharding
+        for name in self._STATE_FIELDS:
+            setattr(self, name, jax.device_put(getattr(self, name), sharding))
+
+    def reset_state(self):
+        """Re-zero the slot state (post-warmup): a pristine pool, with the
+        compiled splice/step executables and the placement retained."""
+        if any(s is not None for s in self.slots):
+            raise RuntimeError("reset_state on an occupied pool")
+        self.window.clear()
+        self._init_state()
 
     # ------------------------------------------------------------------ #
     # jitted bodies
@@ -227,6 +268,21 @@ class DecodePool:
 
 
 class ServingEngine:
+    """Continuous-batching serving engine over a slot-based KV pool.
+
+    The public surface is three calls: :meth:`submit` queues a request,
+    :meth:`step` runs one continuous-batching iteration (admit -> dispatch
+    -> harvest) and returns any finished :class:`~repro.serving.request.
+    Response` objects, and :meth:`run_until_drained` loops :meth:`step`
+    until queue, slots, and in-flight window are all empty. Per-request
+    stage accounting accumulates in ``self.store`` (a ProfileStore).
+
+    ``warmup=True`` pre-traces the pow2 serving shape grid at
+    construction (see :meth:`warm`), so no timed serving stage ever
+    charges an XLA compile. ``legacy=True`` keeps the seed synchronous
+    loop as the measured A/B baseline.
+    """
+
     def __init__(
         self,
         model: Model,
@@ -241,9 +297,15 @@ class ServingEngine:
         inflight: int = 4,
         min_bucket: int = 16,
         legacy: bool = False,
+        warmup: bool = False,
     ):
         self.model = model
         self.params = params
+        # per-stage param handles: the fused engine serves both stages
+        # from one (uncommitted) copy; the disaggregated tier replaces
+        # these with copies committed to each stage's pod slice.
+        self.prefill_params = params
+        self.decode_params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.transport = transport
@@ -293,6 +355,11 @@ class ServingEngine:
         self._prefill_exact_jit = jax.jit(self._prefill_exact_impl)
         self._prefill_shapes: set = set()
         self._prefill_cache = {}  # legacy per-(S, features) jit cache
+
+        self.warmup = warmup
+        self.warm_s = 0.0  # construction-time warm wall, outside all stages
+        if warmup:
+            self.warm_s = self.warm()
 
     # ------------------------------------------------------------------ #
     # decode-pool delegation (legacy loop + external callers)
@@ -355,6 +422,14 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request, now: Optional[float] = None):
+        """Queue a request for admission at the next step boundary.
+
+        Stamps the arrival clock and charges the modeled INGRESS stages
+        (request wire + copy engine, per the deployment's transport) to
+        the request's record; both reach its TTFT/total at finish time,
+        symmetric with the egress wire. Raises if the prompt exceeds
+        ``max_seq``.
+        """
         # one clock source (perf_counter) for arrival, first token, and done
         # stamps; the caller's ``now`` is accepted for API compatibility but
         # no longer mixed into latency math.
@@ -386,6 +461,77 @@ class ServingEngine:
 
     def _bucket(self, s: int) -> int:
         return min(max(_next_pow2(s), self.min_bucket), self.max_seq)
+
+    # ------------------------------------------------------------------ #
+    # Construction-time warmup: pre-trace the serving shape grid
+    # ------------------------------------------------------------------ #
+    def bucket_grid(self) -> list:
+        """Every pow2 prefill bucket this engine can admit into:
+        ``min_bucket, 2*min_bucket, ..., max_seq`` (clamped)."""
+        out, L = [], min(self.min_bucket, self.max_seq)
+        while True:
+            out.append(L)
+            if L >= self.max_seq:
+                return out
+            L = min(L * 2, self.max_seq)
+
+    def warm(self) -> float:
+        """Pre-trace every shape the bucketed serving path can hit, so no
+        timed serving stage ever charges an XLA compile.
+
+        Runs the jits for REAL on dummy inputs (jit's executable cache is
+        not populated by AOT lowering): one prefill per pow2 bucket, the
+        fused admission splice (with every row's slot index out of bounds,
+        so nothing is written), and one decode step on the all-done pool
+        (whose outputs are discarded and the state re-zeroed). The
+        disaggregated tier extends this over its (mode, rows, prefix)
+        handoff extent grid via the :meth:`_warm_admit` seam. Returns the
+        warm wall seconds — charged to no request stage.
+
+        The exact-shape path (feature payloads / SSM-hybrid stacks)
+        compiles per ragged request shape and cannot be pre-traced; under
+        ``legacy=True`` this is a no-op (the legacy loop retraces per
+        prompt length by design).
+        """
+        if self.legacy:
+            return 0.0
+        t0 = time.perf_counter()
+        art = None
+        if self.bucketed_prefill:
+            for L in self.bucket_grid():
+                art = self._warm_bucket(L)
+        self._warm_admit(art)
+        # the decode step compiles once; its ring writes land in rows the
+        # next real splice overwrites, but reset anyway for a bit-pristine
+        # pool
+        self.pool.fill_one(self.decode_params)
+        jax.block_until_ready(self.pool.tokens)
+        self.pool.reset_state()
+        return time.perf_counter() - t0
+
+    def _warm_bucket(self, L: int) -> PrefillArtifact:
+        """Compile one pow2 prefill bucket and return the (all-dummy-row)
+        artifact — shaped and placed exactly like a real admission's, so
+        downstream warm calls hit the same jit cache entries."""
+        npad = self.max_batch
+        toks = jnp.asarray(np.zeros((npad, L), np.int32))
+        lens = jnp.asarray(np.ones((npad,), np.int32))
+        next_toks, cache1, lens_d = self._prefill_bucket_jit(
+            self.prefill_params, toks, lens
+        )
+        self._prefill_shapes.add(("bucket", L))
+        return PrefillArtifact(
+            cache1, np.full((npad,), npad, np.int32),  # every row OOB
+            lens_d, next_toks, jnp.asarray(np.ones((npad,), np.int32)),
+            [], [], n_rows=0, prefix_len=1,
+        )
+
+    def _warm_admit(self, art: Optional[PrefillArtifact]):
+        """Warm the admission path for one all-dummy artifact. The fused
+        engine compiles the pool splice; the disaggregated tier overrides
+        this to also pre-trace its handoff extent grid."""
+        if art is not None:
+            self.pool.splice(art)  # all rows OOB: compiles, writes nothing
 
     # ------------------------------------------------------------------ #
     # Stage seams (overridden by the disaggregated tier)
@@ -458,7 +604,7 @@ class ServingEngine:
             slot_idx[j] = slot
         t0 = time.perf_counter()
         next_toks, cache1, lens_d = self._prefill_bucket_jit(
-            self.params, jnp.asarray(toks), jnp.asarray(lens)
+            self.prefill_params, jnp.asarray(toks), jnp.asarray(lens)
         )
         art = PrefillArtifact(cache1, slot_idx, lens_d, next_toks,
                               jnp.asarray(maxn), reqs, list(slots),
@@ -484,7 +630,9 @@ class ServingEngine:
         if req.features is not None:
             batch["features"] = jnp.asarray(req.features)
         t0 = time.perf_counter()
-        logits, cache1, lengths1 = self._prefill_exact_jit(self.params, batch)
+        logits, cache1, lengths1 = self._prefill_exact_jit(
+            self.prefill_params, batch
+        )
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         # feature frames (vlm) prepend to the token sequence, so the cache's
         # true length is frames + prompt — len(prompt_tokens) alone would
@@ -535,7 +683,7 @@ class ServingEngine:
         if not self.pool.window:
             # pipeline (re)start: don't charge idle time to "inference"
             self._t_mark = time.perf_counter()
-        while self.pool.fill_one(self.params):
+        while self.pool.fill_one(self.decode_params):
             self.decode_steps += 1
 
     def _harvest(self) -> list[Response]:

@@ -1,4 +1,17 @@
-"""Logical-axis -> mesh-axis rules and the ShardCtx passed through models."""
+"""Logical-axis -> mesh-axis rules and the ShardCtx passed through models.
+
+Two layers live here:
+
+* :class:`ShardCtx` + :func:`make_rules` — the logical-axis system model
+  code uses to express tensor parallelism (per-arch, divisibility-aware).
+* Slice-scoped helpers (:func:`pod_slice_mesh`, :func:`slice_sharding`,
+  :func:`place_on_slice`) — carve a sub-mesh out of one axis of an
+  existing mesh and commit arrays to it. The disaggregated serving tier
+  uses these to pin prefill and decode compute to their own "pod" slices
+  (see ``serving/disagg.PodPlacement``): params/state committed to a
+  slice make every jit that consumes them execute on exactly that
+  slice's devices.
+"""
 
 from __future__ import annotations
 
@@ -6,6 +19,7 @@ import dataclasses
 from typing import Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -57,6 +71,51 @@ class ShardCtx:
 
     def constrain(self, x, *logical):
         return jax.lax.with_sharding_constraint(x, self.sharding(*logical))
+
+
+def pod_slice_mesh(mesh: Mesh, pods, axis: str = "pod") -> Mesh:
+    """Sub-mesh over the ``pods`` indices of ``mesh``'s ``axis``.
+
+    Keeps every other mesh axis (and all axis names) intact, so shardings
+    built on the slice compose with the existing logical-axis rules. Two
+    calls with the same mesh/indices produce EQUAL meshes (Mesh equality
+    is by device array), so NamedShardings built per call still hit the
+    same jit cache entries.
+    """
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no {axis!r} axis: {mesh.axis_names}")
+    pods = tuple(pods)
+    if not pods:
+        raise ValueError("empty pod slice")
+    size = mesh.shape[axis]
+    bad = [p for p in pods if not 0 <= p < size]
+    if bad:
+        raise ValueError(f"pod indices {bad} out of range for {axis}={size}")
+    ax = mesh.axis_names.index(axis)
+    devs = np.take(np.asarray(mesh.devices), np.asarray(pods), axis=ax)
+    return Mesh(devs, mesh.axis_names)
+
+
+def slice_sharding(mesh: Mesh, pods, spec: P = P(),
+                   axis: str = "pod") -> NamedSharding:
+    """NamedSharding scoped to the ``pods`` slice of ``mesh``'s ``axis``.
+
+    ``spec=P()`` (default) replicates across the slice's devices — the
+    placement the serving tier wants for per-stage params and pool state;
+    any other spec shards within the slice as usual.
+    """
+    return NamedSharding(pod_slice_mesh(mesh, pods, axis), spec)
+
+
+def place_on_slice(tree, mesh: Mesh, pods, spec: P = P(), axis: str = "pod"):
+    """``device_put`` every leaf of ``tree`` onto the pod slice.
+
+    The result is COMMITTED: jits consuming these leaves compile for (and
+    execute on) exactly the slice's devices, which is what makes per-pod
+    stage placement provable — a computation's output arrays report the
+    slice as their device set.
+    """
+    return jax.device_put(tree, slice_sharding(mesh, pods, spec, axis))
 
 
 def _div(n: int, size: int) -> bool:

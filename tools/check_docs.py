@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Docs link checker: every relative markdown link in README.md and
+docs/*.md must resolve to a file (or directory) in the repo.
+
+External links (http/https/mailto) and pure in-page anchors (#...) are
+skipped; a link's #fragment is stripped before resolution. Run from
+anywhere: paths resolve against the repo root (this file's parent's
+parent). Used by the CI docs job and by tests/test_docs.py.
+
+Usage: python tools/check_docs.py  (exit 1 + a listing on broken links)
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# [text](target) — excluding images' ! is unnecessary: image paths must
+# resolve too
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> list[Path]:
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+
+def check(paths=None) -> list[str]:
+    """Return 'file: broken-target' strings for every unresolvable link."""
+    broken = []
+    for md in paths or doc_files():
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(_SKIP) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                broken.append(f"{md.relative_to(ROOT)}: {target}")
+    return broken
+
+
+def main() -> int:
+    files = doc_files()
+    broken = check(files)
+    if broken:
+        print("broken doc links:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    n = sum(len(_LINK.findall(p.read_text())) for p in files)
+    print(f"docs links ok: {n} links across {len(files)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
