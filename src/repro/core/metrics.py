@@ -1,4 +1,6 @@
-"""Aggregation helpers for the profiler (Table I metrics)."""
+"""Aggregation helpers for the profiler (Table I metrics) and the serving
+SLO telemetry the cluster tier reports (TTFT/TPOT/E2E percentiles,
+per-replica balance)."""
 
 from __future__ import annotations
 
@@ -44,4 +46,52 @@ def summarize(xs) -> dict:
         "std": std(xs),
         "cov": cov(xs),
         "n": len(xs),
+    }
+
+
+def jain_index(xs) -> float:
+    """Jain's fairness index (sum x)^2 / (n * sum x^2) over per-replica
+    load shares: 1.0 means perfectly balanced, 1/n means one replica took
+    everything. The cluster tier reports it over per-replica busy-slot
+    time and routed-request counts."""
+    xs = [float(x) for x in xs]
+    if not xs:
+        return 1.0
+    sq = sum(x * x for x in xs)
+    if sq == 0.0:
+        return 1.0  # nothing routed anywhere: vacuously balanced
+    tot = sum(xs)
+    return tot * tot / (len(xs) * sq)
+
+
+def slo_summary(responses, *, warmup: int = 0) -> dict:
+    """Warmup-aware serving SLO percentiles over Response objects.
+
+    The first ``warmup`` responses (in completion order) are dropped
+    before aggregation — they carry cold-start costs (first-touch jit
+    compiles on unwarmed engines, cache population) that are not
+    steady-state tail latency. Reports, each as a :func:`summarize` dict:
+
+    * ``ttft_s``  — time to first token.
+    * ``tpot_s``  — time per output token after the first,
+      ``(total - ttft) / (tokens - 1)``, single-token responses excluded.
+    * ``e2e_s``   — end-to-end request latency (``total_s``).
+    * ``queue_s`` — the pre-admission 'queue' stage (submit -> prefill
+      pick), the component load imbalance shows up in.
+    """
+    responses = list(responses)
+    if warmup < 0:
+        raise ValueError(f"warmup must be >= 0: {warmup}")
+    rs = responses[warmup:]
+    tpots = [
+        (r.total_s - r.ttft_s) / (len(r.tokens) - 1)
+        for r in rs if len(r.tokens) > 1
+    ]
+    return {
+        "n": len(rs),
+        "warmup_dropped": min(warmup, len(responses)),
+        "ttft_s": summarize(r.ttft_s for r in rs),
+        "tpot_s": summarize(tpots),
+        "e2e_s": summarize(r.total_s for r in rs),
+        "queue_s": summarize(r.stage_s.get("queue", 0.0) for r in rs),
     }

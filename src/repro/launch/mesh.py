@@ -2,7 +2,7 @@
 
 Every mesh constructor here is a FUNCTION so importing this module never
 touches jax device state (the dry-run must set XLA_FLAGS before the first
-jax call). Three mesh families:
+jax call). Four mesh families:
 
 * :func:`make_production_mesh` — the full TPU mesh the dry-run/roofline
   lower against ('pod' x 'data' x 'model' when multi-pod).
@@ -13,6 +13,12 @@ jax call). Three mesh families:
   opposite ends of this axis, the KV handoff collective permutes across
   it, and ``serving.disagg.PodPlacement`` carves per-stage compute
   slices out of it (via ``sharding.partition.pod_slice_mesh``).
+* :func:`make_cluster_mesh` — the 1-D ('pod',) mesh a multi-replica
+  serving cluster carves into per-replica slices
+  (``serving.cluster.ServingCluster``): replica i owns pods
+  [i*ppr, (i+1)*ppr) and commits its engine's params/state there, so
+  replicas are genuinely independent failure/queueing domains on a
+  multi-device backend.
 """
 
 from __future__ import annotations
@@ -63,3 +69,27 @@ def make_serving_pod_mesh(npods=None):
     if npods > len(avail):
         raise ValueError(f"npods {npods} > available devices {len(avail)}")
     return Mesh(np.asarray(avail[:npods]), ("pod",))
+
+
+def make_cluster_mesh(n_replicas: int, pods_per_replica: int = 1):
+    """('pod',)-axis mesh for an ``n_replicas``-replica serving cluster.
+
+    The pod axis spans ``n_replicas * pods_per_replica`` slots —
+    ``pods_per_replica`` is 1 for fused-engine replicas and 2 for
+    disaggregated (prefill pod + decode pod) replicas. When the backend
+    has fewer devices than slots, the axis clamps to what exists and the
+    cluster's replica slices overlap modulo the axis (the degenerate
+    single-device case runs every replica on one CPU, which is what lets
+    the full cluster tier execute in tier-1 tests); with enough devices
+    every replica owns a disjoint slice.
+    """
+    from jax.sharding import Mesh
+
+    if n_replicas < 1 or pods_per_replica < 1:
+        raise ValueError(
+            f"need n_replicas >= 1 and pods_per_replica >= 1: "
+            f"({n_replicas}, {pods_per_replica})"
+        )
+    avail = jax.devices()
+    need = n_replicas * pods_per_replica
+    return Mesh(np.asarray(avail[:min(need, len(avail))]), ("pod",))

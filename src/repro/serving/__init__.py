@@ -1,4 +1,5 @@
 from repro.serving.client import ClosedLoopClient, run_closed_loop
+from repro.serving.cluster import Replica, Router, ServingCluster
 from repro.serving.disagg import (
     DisaggregatedEngine,
     PodPlacement,
@@ -6,9 +7,20 @@ from repro.serving.disagg import (
 )
 from repro.serving.engine import DecodePool, PrefillArtifact, ServingEngine
 from repro.serving.gateway import Gateway
+from repro.serving.loadgen import (
+    Arrival,
+    load_trace,
+    poisson_schedule,
+    run_closed_loop_baseline,
+    run_open_loop,
+    save_trace,
+    trace_schedule,
+)
 from repro.serving.request import Request, Response
 
 __all__ = ["ServingEngine", "DisaggregatedEngine", "DecodePool",
            "PrefillArtifact", "PodPlacement", "Gateway", "Request",
            "Response", "ClosedLoopClient", "run_closed_loop",
-           "make_pod_mesh"]
+           "make_pod_mesh", "ServingCluster", "Router", "Replica",
+           "Arrival", "poisson_schedule", "trace_schedule", "load_trace",
+           "save_trace", "run_open_loop", "run_closed_loop_baseline"]

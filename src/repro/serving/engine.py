@@ -31,12 +31,17 @@ Fast path (the serving hot loop, rebuilt for throughput):
   compile per bucket; dummy rows scatter out-of-bounds and drop). Compile
   count is O(log max_seq) instead of O(distinct prompt lengths), and an
   admission burst is a single device dispatch.
-* **Device-resident decode loop** — argmax sampling, EOS detection, per-slot
-  done flags, and length updates all live inside one jitted decode step
-  that returns a device-side ``done`` mask. The host never syncs per token:
-  up to ``inflight`` steps are dispatched ahead and each step's tokens+done
-  arrive in one host transfer at harvest time. The KV pool is donated
-  through the step, so steady-state decode holds a single cache buffer.
+* **Device-resident decode loop** — sampling (greedy argmax by default;
+  temperature/top-k categorical with an in-jit threaded PRNG key when
+  ``temperature > 0``), EOS detection, per-slot done flags, and length
+  updates all live inside one jitted decode step that returns a
+  device-side ``done`` mask. The host never syncs per token: up to
+  ``inflight`` steps are dispatched ahead — capped adaptively at the live
+  slots' outstanding token budget (``adaptive_window``), so the window
+  stops paying overshoot steps past finishing requests — and each step's
+  tokens+done arrive in one host transfer at harvest time. The KV pool is
+  donated through the step, so steady-state decode holds a single cache
+  buffer.
 * **Fused admission splice** — growing a prefill cache to the pool window
   and scattering it into the free slots (plus lengths/tokens/flag updates)
   is one jitted, donated call instead of a per-leaf ``.at[].set`` chain.
@@ -130,13 +135,26 @@ class DecodePool:
     """
 
     def __init__(self, model: Model, *, max_batch: int, max_seq: int,
-                 eos_token: Optional[int], inflight: int):
+                 eos_token: Optional[int], inflight: int,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0):
         self.model = model
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.inflight = inflight
         self.slots: list[Optional[Request]] = [None] * max_batch
         self.eos_arr = jnp.int32(eos_token if eos_token is not None else -1)
+        # device-side sampling: temperature 0 keeps the greedy argmax path
+        # (the test baseline); temperature > 0 samples inside the jitted
+        # step from top_k-filtered logits with a PRNG key threaded through
+        # the pool state — no host round-trip per token.
+        if temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0: {temperature}")
+        if top_k < 0:
+            raise ValueError(f"top_k must be >= 0: {top_k}")
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.sample_seed = int(sample_seed)
         self.window: deque[_InFlight] = deque()
         self._sharding = None  # optional committed placement (pod slice)
         self._init_state()
@@ -146,7 +164,7 @@ class DecodePool:
     # every device-state array the pool owns: _init_state (re)builds them
     # and place() commits them — keep the two in sync through this tuple
     _STATE_FIELDS = ("caches", "lengths", "tokens", "gen", "maxn", "done",
-                     "eos_arr")
+                     "eos_arr", "key")
 
     def _init_state(self):
         """(Re)build the device-side slot state (the ``_STATE_FIELDS``
@@ -158,6 +176,9 @@ class DecodePool:
         self.gen = jnp.zeros((self.max_batch,), jnp.int32)
         self.maxn = jnp.zeros((self.max_batch,), jnp.int32)
         self.done = jnp.ones((self.max_batch,), bool)
+        # raw uint32 key data (not a typed key array) so the whole state
+        # tuple stays plain arrays for place()/device_put
+        self.key = jax.random.PRNGKey(self.sample_seed)
         if self._sharding is not None:
             self.place(self._sharding)
 
@@ -183,23 +204,46 @@ class DecodePool:
     # jitted bodies
     # ------------------------------------------------------------------ #
     def _step_impl(self, params, caches, tokens, lengths, gen, maxn, done,
-                   eos):
+                   eos, key):
         """One whole-batch decode step, sampling and stop logic on device.
 
         Frozen (done/empty) slots keep their token and length so their ring
         slot stays put; their lane still flows through the batched compute
         (the output is discarded), which is what keeps the loop shape-stable.
+
+        Sampling is greedy argmax at temperature 0 (the default and the
+        token-identity baseline); otherwise one categorical draw per slot
+        from the temperature-scaled, top_k-filtered logits, with the PRNG
+        key split in-jit and threaded back through the state — the whole
+        batch consumes one split per step, so the token stream is a pure
+        function of (sample_seed, step index, slot).
         """
         active = ~done
         logits, caches, lengths2 = self.model.decode_step(
             params, caches, tokens, lengths
         )
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if self.temperature > 0.0:
+            key, sub = jax.random.split(key)
+        else:
+            sub = key
+        next_tok = self._sample(logits, sub)
         next_tok = jnp.where(active, next_tok, tokens[:, 0])
         gen = gen + active.astype(jnp.int32)
         done = done | (gen >= maxn) | (active & (next_tok == eos))
         lengths = jnp.where(active, lengths2, lengths)
-        return next_tok[:, None], caches, lengths, gen, done
+        return next_tok[:, None], caches, lengths, gen, done, key
+
+    def _sample(self, logits, key):
+        """Next-token choice on device: argmax, or temperature/top-k
+        categorical (``top_k == 0`` keeps the full vocabulary; ``top_k ==
+        1`` degenerates to argmax exactly, temperature notwithstanding)."""
+        if self.temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        lg = logits.astype(jnp.float32) / self.temperature
+        if self.top_k > 0:
+            kth = jax.lax.top_k(lg, self.top_k)[0][:, -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
 
     def _splice_impl(self, pool, group, slots, true_lens, next_toks, maxn_new,
                      lengths, tokens, gen, done, maxn):
@@ -251,14 +295,22 @@ class DecodePool:
             self.gen, self.done, self.maxn,
         )
 
-    def fill_one(self, params) -> bool:
-        """Dispatch one decode step if the in-flight window has room."""
-        if len(self.window) >= self.inflight:
+    def fill_one(self, params, limit: Optional[int] = None) -> bool:
+        """Dispatch one decode step if the in-flight window has room.
+
+        ``limit`` caps the window below ``inflight`` (adaptive dispatch:
+        the engine passes the live slots' max outstanding token budget, so
+        the device never runs steps no request can consume — the overshoot
+        the fixed-depth window wasted on every finishing request).
+        """
+        cap = self.inflight if limit is None else max(0, min(self.inflight,
+                                                             limit))
+        if len(self.window) >= cap:
             return False
         (self.tokens, self.caches, self.lengths, self.gen,
-         self.done) = self._step_jit(
+         self.done, self.key) = self._step_jit(
             params, self.caches, self.tokens, self.lengths,
-            self.gen, self.maxn, self.done, self.eos_arr,
+            self.gen, self.maxn, self.done, self.eos_arr, self.key,
         )
         self.window.append(_InFlight(self.tokens, self.done, tuple(self.slots)))
         return True
@@ -275,7 +327,10 @@ class ServingEngine:
     -> harvest) and returns any finished :class:`~repro.serving.request.
     Response` objects, and :meth:`run_until_drained` loops :meth:`step`
     until queue, slots, and in-flight window are all empty. Per-request
-    stage accounting accumulates in ``self.store`` (a ProfileStore).
+    stage accounting accumulates in ``self.store`` (a ProfileStore); the
+    pre-admission wait (submit -> the admission that picks the request)
+    is charged as the 'queue' stage, so single-engine and cluster
+    breakdowns compare like for like.
 
     ``warmup=True`` pre-traces the pow2 serving shape grid at
     construction (see :meth:`warm`), so no timed serving stage ever
@@ -298,6 +353,10 @@ class ServingEngine:
         min_bucket: int = 16,
         legacy: bool = False,
         warmup: bool = False,
+        adaptive_window: bool = True,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        sample_seed: int = 0,
     ):
         self.model = model
         self.params = params
@@ -331,12 +390,22 @@ class ServingEngine:
         self.inflight = 1 if legacy else max(1, inflight)
         self.min_bucket = min_bucket
         self.legacy = legacy
+        # adaptive in-flight window: never dispatch deeper than the live
+        # slots' outstanding token budget (fixed-depth windows waste up to
+        # inflight-1 steps per finishing request)
+        self.adaptive_window = adaptive_window and not legacy
+        if legacy and temperature > 0.0:
+            raise ValueError(
+                "device-side sampling requires the fast path (the legacy "
+                "loop argmaxes on host)"
+            )
         self.store = ProfileStore()
 
         self.queue: deque[Request] = deque()
         self.pool = DecodePool(
             model, max_batch=max_batch, max_seq=max_seq,
             eos_token=eos_token, inflight=self.inflight,
+            temperature=temperature, top_k=top_k, sample_seed=sample_seed,
         )
         self._records: dict[int, RequestRecord] = {}
 
@@ -617,6 +686,10 @@ class ServingEngine:
         now = time.perf_counter()
         for j, (req, slot) in enumerate(zip(reqs, slots)):
             rec = self._records[req.request_id]
+            # pre-admission wait: submit -> this admission picking the
+            # request. Measured wall inside [t_issue, t_done], so
+            # total_s >= sum(stage_s) still holds.
+            rec.add("queue", max(t0 - rec.t_issue, 0.0))
             rec.add("preprocess", dt / n)  # prefill = serving "preprocessing"
             req.generated.append(int(toks_host[j]))
             req.t_first_token = now
@@ -654,6 +727,7 @@ class ServingEngine:
              None if req.features is None else np.shape(req.features))
         )
         rec = self._records[req.request_id]
+        rec.add("queue", max(t0 - rec.t_issue, 0.0))  # submit -> admission
         rec.add("preprocess", dt)
         req.generated.append(tok_host)
         req.t_first_token = time.perf_counter()
@@ -677,13 +751,29 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
     # Decode: async dispatch window + single-transfer harvest
     # ------------------------------------------------------------------ #
+    def _window_limit(self) -> Optional[int]:
+        """Adaptive dispatch depth: the max outstanding token budget among
+        live slots. Steps dispatched beyond it cannot advance any request
+        (every slot's device-side done flag freezes first), so they are
+        pure waste — the fixed window paid up to inflight-1 of them per
+        finishing request. EOS can still finish a request earlier than its
+        budget; the cap only removes the waste the budget proves."""
+        if not self.adaptive_window:
+            return None
+        out = [
+            req.max_new_tokens - len(req.generated)
+            for req in self.pool.slots if req is not None
+        ]
+        return max(out, default=0)
+
     def _dispatch(self):
         if self.pool.all_free:
             return
         if not self.pool.window:
             # pipeline (re)start: don't charge idle time to "inference"
             self._t_mark = time.perf_counter()
-        while self.pool.fill_one(self.decode_params):
+        limit = self._window_limit()
+        while self.pool.fill_one(self.decode_params, limit=limit):
             self.decode_steps += 1
 
     def _harvest(self) -> list[Response]:
@@ -769,12 +859,19 @@ class ServingEngine:
             self._prefill_finished = []
         return done
 
+    @property
+    def idle(self) -> bool:
+        """No queued requests, no occupied slots, no in-flight steps —
+        the drain condition, shared with the cluster tier's router and
+        the open-loop load generator."""
+        return (not self.queue and self.pool.all_free
+                and not self.pool.window)
+
     def run_until_drained(self, max_steps: int = 10_000) -> list[Response]:
         out = []
         for _ in range(max_steps):
             out.extend(self.step())
-            if (not self.queue and self.pool.all_free
-                    and not self.pool.window):
+            if self.idle:
                 break
         return out
 
@@ -797,6 +894,7 @@ class ServingEngine:
         logits.block_until_ready()
         dt = time.perf_counter() - t0
         rec = self._records[req.request_id]
+        rec.add("queue", max(t0 - rec.t_issue, 0.0))  # submit -> admission
         rec.add("preprocess", dt)
 
         cache1 = kvc.grow_cache(cache1, self.max_seq)

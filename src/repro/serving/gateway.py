@@ -52,9 +52,21 @@ class Gateway:
                     rec.cpu_s += nbytes * self.profile.tcp_cpu_per_byte
         return done
 
+    def run_until_drained(self, max_steps: int = 10_000):
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if self.engine.idle:
+                break
+        return out
+
     @property
     def queue(self):
         return self.engine.queue
+
+    @property
+    def idle(self):
+        return self.engine.idle
 
     @property
     def _records(self):

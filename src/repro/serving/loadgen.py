@@ -1,0 +1,173 @@
+"""Traffic generation for the serving engines and the cluster tier.
+
+Three arrival processes, all seeded and deterministic (same seed -> the
+same arrival offsets AND the same prompt token arrays, asserted in
+tests):
+
+* **Open-loop Poisson** (:func:`poisson_schedule`) — exponential
+  interarrival gaps at ``rate_rps``. Open-loop means arrivals do NOT wait
+  for completions; when service falls behind, backlog (the per-request
+  'queue' stage) grows without bound — exactly the tail-latency regime a
+  closed loop can never produce, because a closed loop throttles itself
+  to the server's pace.
+* **Trace replay** (:func:`trace_schedule` / :func:`load_trace` /
+  :func:`save_trace`) — explicit per-request arrival offsets, prompt
+  lengths, budgets, priorities from a JSON-lines trace file or an
+  in-memory list of dicts. The benchmark's skewed trace (alternating
+  heavy/light budgets) is expressed this way.
+* **Closed-loop baseline** (:func:`run_closed_loop_baseline`) — N
+  clients, each re-submitting on completion (``serving/client.py``), the
+  paper's SS-III-B workload model and the right A/B control for the open
+  loop.
+
+:func:`run_open_loop` is the wall-clock driver: it submits each request
+when its arrival time comes due regardless of engine state, steps the
+engine/cluster between arrivals, and returns the completion-ordered
+responses (each already carrying queue/prefill/transfer/decode stage
+breakdowns from the engine records).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One scheduled submission: ``t`` seconds after the run starts."""
+
+    t: float
+    request: Request
+
+
+def _make_request(rng, vocab: int, prompt_len: int, max_new: int,
+                  client_id: int = 0, priority: int = 0) -> Request:
+    return Request(
+        prompt_tokens=rng.integers(0, vocab, int(prompt_len),
+                                   dtype=np.int32),
+        max_new_tokens=int(max_new),
+        client_id=int(client_id),
+        priority=int(priority),
+    )
+
+
+def poisson_schedule(vocab: int, *, rate_rps: float, n_requests: int,
+                     prompt_lens=(8, 16, 32, 64), max_new: int = 8,
+                     seed: int = 0, client_id: int = 0) -> list:
+    """Open-loop Poisson arrivals: exponential gaps at ``rate_rps``,
+    prompt lengths drawn uniformly from ``prompt_lens``. Deterministic in
+    ``seed`` (gaps, lengths, and token contents all come from one
+    ``default_rng(seed)`` stream)."""
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be > 0: {rate_rps}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, n_requests)
+    times = np.cumsum(gaps)
+    lens = rng.choice(np.asarray(prompt_lens, np.int64), size=n_requests)
+    return [
+        Arrival(float(times[i]),
+                _make_request(rng, vocab, lens[i], max_new, client_id))
+        for i in range(n_requests)
+    ]
+
+
+def trace_schedule(entries, vocab: int, *, seed: int = 0) -> list:
+    """Arrival schedule from trace entries (dicts with ``t`` seconds,
+    ``prompt_len``, and optional ``max_new``/``client_id``/``priority``).
+    Prompt token contents are drawn from ``seed``; the entries provide
+    timing and shape, so a saved trace replays identically."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for e in entries:
+        out.append(Arrival(
+            float(e["t"]),
+            _make_request(rng, vocab, e["prompt_len"], e.get("max_new", 8),
+                          e.get("client_id", 0), e.get("priority", 0)),
+        ))
+    if any(out[i].t > out[i + 1].t for i in range(len(out) - 1)):
+        raise ValueError("trace arrival times must be non-decreasing")
+    return out
+
+
+def load_trace(path: str) -> list:
+    """Read a JSON-lines trace file (one entry dict per line; blank lines
+    and ``#`` comment lines skipped)."""
+    entries = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                entries.append(json.loads(line))
+    return entries
+
+
+def save_trace(path: str, entries) -> None:
+    """Write trace entries as JSON lines (the :func:`load_trace` format)."""
+    with open(path, "w") as f:
+        for e in entries:
+            f.write(json.dumps(e) + "\n")
+
+
+def run_open_loop(engine, schedule: list, *, max_steps: int = 1_000_000,
+                  poll_s: float = 0.002) -> list:
+    """Drive ``engine`` (a ServingEngine, DisaggregatedEngine,
+    ServingCluster, or a Gateway over any of them) with wall-clock
+    open-loop arrivals.
+
+    Each request is submitted when its offset comes due — never gated on
+    completions — and the engine steps continuously in between, so
+    pre-admission backlog lands in the 'queue' stage of each record.
+    Returns responses in completion order; raises if the drain exceeds
+    ``max_steps`` (a stuck engine, not a slow one).
+    """
+    sched = sorted(schedule, key=lambda a: a.t)
+    out = []
+    i = 0
+    steps = 0
+    t0 = time.perf_counter()
+    while i < len(sched) or not engine.idle:
+        now = time.perf_counter() - t0
+        while i < len(sched) and sched[i].t <= now:
+            engine.submit(sched[i].request, time.perf_counter())
+            i += 1
+        if engine.idle and i < len(sched):
+            # nothing to step: sleep up to the next arrival (capped so a
+            # long gap still polls the clock)
+            time.sleep(min(max(sched[i].t - now, 0.0), poll_s))
+            continue
+        out.extend(engine.step())
+        steps += 1
+        if steps > max_steps:
+            raise RuntimeError(
+                f"open-loop drain exceeded {max_steps} steps with "
+                f"{len(out)}/{len(sched)} responses"
+            )
+    return out
+
+
+def run_closed_loop_baseline(engine, vocab: int, *, n_clients: int = 4,
+                             requests_per_client: int = 4,
+                             prompt_len: int = 32, max_new_tokens: int = 8,
+                             seed: int = 0) -> list:
+    """Closed-loop control: ``n_clients`` clients, each submitting its
+    next request only when the previous completes (``serving/client.py``).
+    Returns the flat completion list across clients. Concurrency is
+    capped at ``n_clients`` by construction — the backlog an open loop
+    measures cannot form here, which is exactly why the paper's
+    tail-latency story needs the open loop."""
+    from repro.serving.client import ClosedLoopClient, run_closed_loop
+
+    clients = [
+        ClosedLoopClient(i, vocab, prompt_len=prompt_len,
+                         max_new_tokens=max_new_tokens, seed=seed)
+        for i in range(n_clients)
+    ]
+    run_closed_loop(engine, clients, requests_per_client)
+    return [r for c in clients for r in c.completed]
