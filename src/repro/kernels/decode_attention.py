@@ -127,3 +127,74 @@ def decode_attention_bhgd(
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
         interpret=interpret,
     )(lengths, q, k, v)
+
+
+def _paged_decode_kernel(
+    len_ref, pt_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, bk, n_kv, w_real,
+):
+    # identical online-softmax body; the page table only changes WHERE the
+    # BlockSpec fetched this tile from, not what it means (logical page j
+    # still covers ring positions [j*bk, (j+1)*bk))
+    _decode_kernel(
+        len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+        scale=scale, bk=bk, n_kv=n_kv, w_real=w_real,
+    )
+
+
+def paged_decode_attention_bhgd(
+    q, k_blocks, v_blocks, page_table, lengths, *, scale=None,
+    interpret=False, w_real=None,
+):
+    """Paged decode attention: KV gathered through a page table.
+
+    q: [B,Hkv,G,hd]; k_blocks, v_blocks: [N, Hkv, page, hd] block pool;
+    page_table: [B, n_pages] int32 (logical page j of row b lives in
+    physical block page_table[b, j]); lengths: [B] valid ring slots.
+
+    Same grid/body as :func:`decode_attention_bhgd` with block size =
+    page; the KV index_map dereferences the (prefetched) page table, so
+    each grid step DMAs exactly one physical block HBM->VMEM — shared
+    prefix blocks are fetched from the one pooled copy, never duplicated
+    per row. The logical-page index is length-clamped exactly like the
+    ring kernel, so a ragged batch streams sum(lengths) bytes.
+    """
+    B, Hkv, G, hd = q.shape
+    N, _, page, _ = k_blocks.shape
+    n_pages = page_table.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+    W = n_pages * page
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, bk=page, n_kv=n_pages,
+        w_real=w_real if w_real is not None else W,
+    )
+
+    def kv_index(b, h, j, lens, pt):
+        last = jnp.maximum((lens[b] + page - 1) // page - 1, 0)
+        jc = jnp.minimum(j, last)
+        return (pt[b * n_pages + jc], h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, lens, pt: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd), kv_index),
+            pl.BlockSpec((1, 1, page, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, hd), lambda b, h, j, lens, pt: (b, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, page_table.reshape(-1), q, k_blocks, v_blocks)

@@ -77,6 +77,31 @@ def decode_attention(q, k, v, lengths, *, scale=None, block_k=512,
     return o.reshape(B, 1, H, hd)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_blocks, v_blocks, page_table, lengths, *,
+                           scale=None, interpret=None):
+    """q: [B,1,H,hd]; k_blocks, v_blocks: [N, page, Hkv, hd] block pool;
+    page_table: [B, n_pages] int32; lengths: [B] -> [B,1,H,hd].
+
+    Paged variant of :func:`decode_attention`: the kernel's KV index_map
+    dereferences the page table, streaming each row's blocks from the
+    shared pool (block size = page, length-clamped like the ring kernel).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    B, _, H, hd = q.shape
+    Hkv = k_blocks.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, 1, Hkv, G, hd)[:, 0]  # [B,Hkv,G,hd]
+    kt = jnp.moveaxis(k_blocks, 1, 2)  # [N,Hkv,page,hd]
+    vt = jnp.moveaxis(v_blocks, 1, 2)
+    o = _dec.paged_decode_attention_bhgd(
+        qg, kt, vt, page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+        scale=scale, interpret=interpret,
+        w_real=page_table.shape[1] * k_blocks.shape[1],
+    )
+    return o.reshape(B, 1, H, hd)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=None):
     """Model layout: x [b,S,nh,hd]; dt [b,S,nh]; A [nh]; B,C [b,S,1,ds].

@@ -78,12 +78,22 @@ def chunked_attention(
     q_chunk: int = 1024,
     scale: Optional[float] = None,
     shard_ctx=None,
+    prior_k=None,
+    prior_v=None,
+    prior_valid=None,
 ):
     """Memory-bounded attention: O(q_chunk * S_kv) live scores.
 
     q: [B, Sq, H, hd]; k, v: [B, Skv, Hkv, hd]. GQA via KV-head expansion
     (see expand_kv). ``window`` > 0 restricts attention to the trailing
     ``window`` positions (sliding-window variant for long-context dense).
+
+    ``prior_k``/``prior_v`` ([B, Pp, Hkv, hd], already RoPE'd at their
+    absolute positions) prepend a cached context the queries attend to but
+    never re-compute: row ``b`` treats its first ``prior_valid[b]`` prior
+    slots as valid history at absolute positions ``[0, prior_valid[b])``
+    and its own queries as positions ``prior_valid[b] + i`` — the
+    suffix-prefill path of the paged KV pool's prefix reuse.
     """
     B, Sq, H, hd = q.shape
     Hkv = k.shape[2]
@@ -92,6 +102,16 @@ def chunked_attention(
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
     k = expand_kv(k, G, shard_ctx)
     v = expand_kv(v, G, shard_ctx)
+    Pp = 0
+    if prior_k is not None:
+        Pp = prior_k.shape[1]
+        if Pp:
+            k = jnp.concatenate(
+                [expand_kv(prior_k.astype(k.dtype), G, shard_ctx), k], axis=1
+            )
+            v = jnp.concatenate(
+                [expand_kv(prior_v.astype(v.dtype), G, shard_ctx), v], axis=1
+            )
     if shard_ctx is not None:
         q = shard_ctx.constrain(q, "batch", None, "heads", None)
 
@@ -110,12 +130,29 @@ def chunked_attention(
             * scale
         )
         q_idx = ci * q_chunk + jnp.arange(q_chunk)
-        mask = jnp.ones((q_chunk, k.shape[1]), bool)
-        if causal:
-            mask &= q_idx[:, None] >= kv_idx[None, :]
-        if window > 0:
-            mask &= kv_idx[None, :] > q_idx[:, None] - window
-        scores = jnp.where(mask, scores, NEG_INF)
+        if Pp:
+            # per-row mask [B, Cq, K]: prior cols valid below prior_valid[b]
+            # (always causally visible); suffix cols use suffix-relative
+            # causality; window uses per-row absolute positions.
+            pv = prior_valid[:, None, None].astype(jnp.int32)  # [B,1,1]
+            col = kv_idx[None, None, :]
+            qi = q_idx[None, :, None]
+            is_prior = col < Pp
+            rel = col - Pp
+            mask = jnp.where(is_prior, col < pv, True)
+            if causal:
+                mask &= jnp.where(is_prior, True, qi >= rel)
+            if window > 0:
+                abs_kv = jnp.where(is_prior, col, pv + rel)
+                mask &= abs_kv > (pv + qi) - window
+            scores = jnp.where(mask[:, None], scores, NEG_INF)
+        else:
+            mask = jnp.ones((q_chunk, k.shape[1]), bool)
+            if causal:
+                mask &= q_idx[:, None] >= kv_idx[None, :]
+            if window > 0:
+                mask &= kv_idx[None, :] > q_idx[:, None] - window
+            scores = jnp.where(mask, scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
         return out  # [B, Cq, H, hd_v]

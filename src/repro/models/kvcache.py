@@ -220,6 +220,227 @@ def request_cache_nbytes(caches, true_len: int, *, itemsize=None) -> int:
     return math.ceil(total)
 
 
+# --------------------------------------------------------------------------- #
+# Paged KV pool: fixed-size blocks + per-request page tables + refcounts.
+#
+# A paged tree has the SAME leaf ranks as a dense pooled tree, with the
+# (batch, ring) leading axes replaced by (num_blocks, page_size): a dense
+# seq leaf [.., B, W, rest] becomes [.., N, page, rest] (scan-stacked layer
+# axes stay in front). Block 0 is a permanently-zero sentinel: page tables
+# initialize to it, gathers through it read zeros (masked by valid_len
+# downstream), and writes targeting it are redirected out of bounds so JAX's
+# scatter drops them — freed/empty slots therefore never corrupt the pool.
+# --------------------------------------------------------------------------- #
+def _seq_visit(caches, fn):
+    """Map ``fn(leaf, block_ax)`` over seq-keyed leaves (others must not
+    appear in a paged tree — the serving tier gates archs accordingly)."""
+
+    def visit(path, leaf):
+        key = _leaf_key(path)
+        base = _BASE_NDIM.get(key)
+        if base is None or key not in _SEQ_KEYS:
+            raise ValueError(
+                f"paged KV pool only supports seq-keyed cache leaves, got "
+                f"{key!r} (attention-only / MLA stacks)"
+            )
+        return fn(leaf, leaf.ndim - base)
+
+    return jax.tree_util.tree_map_with_path(visit, caches)
+
+
+def paged_specs(dense_specs, num_blocks: int, page_size: int):
+    """ShapeDtypeStruct tree for the block pool backing ``dense_specs``
+    (a dense [.., B, W, ..] cache-spec tree)."""
+
+    def respec(s, b_ax):
+        shape = list(s.shape)
+        shape[b_ax] = num_blocks
+        shape[b_ax + 1] = page_size
+        return jax.ShapeDtypeStruct(tuple(shape), s.dtype)
+
+    return _seq_visit(dense_specs, respec)
+
+
+def init_paged(dense_specs, num_blocks: int, page_size: int):
+    """Zero-initialized block pool tree (block 0 = the zero sentinel)."""
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        paged_specs(dense_specs, num_blocks, page_size),
+    )
+
+
+def gather_pages(paged, page_table):
+    """Materialize per-request dense caches from the block pool.
+
+    paged: seq leaves [.., N, page, rest]; page_table: [B, n_pages] int32.
+    Returns the dense tree [.., B, n_pages*page, rest] — rows gather their
+    pages in order, unallocated entries (block 0) read zeros.
+    """
+    B, n_pages = page_table.shape
+
+    def gather(leaf, b_ax):
+        # page tables only hold in-range ids; clip like the ring kernel's
+        # length clamp so a padded table can never read garbage
+        g = jnp.take(leaf, page_table, axis=b_ax, mode="clip")
+        shape = (g.shape[: b_ax + 1] + (n_pages * leaf.shape[b_ax + 1],)
+                 + g.shape[b_ax + 3:])
+        return g.reshape(shape)
+
+    return _seq_visit(paged, gather)
+
+
+def scatter_pages(paged, dense, dest_blocks):
+    """Write a dense [.., B, L, rest] tree into the pool page-wise.
+
+    dest_blocks: [B, L/page] int32 destination block per page; entries that
+    are out of bounds (>= num_blocks) OR the zero sentinel are dropped, so
+    dummy admission rows and beyond-extent pages vanish without a separate
+    code path. Returns the updated pool tree.
+    """
+    B, n_pages = dest_blocks.shape
+
+    def do(blocks_leaf, dense_leaf, b_ax, page):
+        L = dense_leaf.shape[b_ax + 1]
+        pages = dense_leaf.reshape(
+            dense_leaf.shape[: b_ax + 1] + (n_pages, page)
+            + dense_leaf.shape[b_ax + 2:]
+        )
+        # flatten (B, n_pages) -> one scatter axis at b_ax
+        pages = jnp.moveaxis(pages, (b_ax, b_ax + 1), (0, 1))
+        pages = pages.reshape((B * n_pages,) + pages.shape[2:])
+        pages = jnp.moveaxis(pages, 0, b_ax)
+        nb = blocks_leaf.shape[b_ax]
+        dest = dest_blocks.reshape(-1)
+        dest = jnp.where(dest == 0, nb, dest)  # never write the sentinel
+        idx = (slice(None),) * b_ax + (dest,)
+        return blocks_leaf.at[idx].set(pages.astype(blocks_leaf.dtype))
+
+    def paired(path, blocks_leaf):
+        key = _leaf_key(path)
+        base = _BASE_NDIM[key]
+        b_ax = blocks_leaf.ndim - base
+        dense_leaf = _tree_get(dense, path)
+        return do(blocks_leaf, dense_leaf, b_ax, blocks_leaf.shape[b_ax + 1])
+
+    return jax.tree_util.tree_map_with_path(paired, paged)
+
+
+def _tree_get(tree, path):
+    node = tree
+    for p in path:
+        node = node[p.key if hasattr(p, "key") else p.idx]
+    return node
+
+
+def scatter_token(paged, dense, lengths, page_table):
+    """Write back the ONE ring slot a decode step touched per row.
+
+    ``dense`` is the gathered tree AFTER ``Model.decode_step`` ring-wrote
+    the new token at slot ``lengths % W`` (lengths = pre-step values). The
+    written value lands at (block = page_table[b, slot/page], offset =
+    slot % page); rows whose page-table entry is the zero sentinel (freed
+    or never-admitted slots) redirect out of bounds and drop.
+    """
+    B, n_pages = page_table.shape
+
+    def put(blocks_leaf, dense_leaf, b_ax):
+        page = blocks_leaf.shape[b_ax + 1]
+        W = n_pages * page
+        slot = (lengths % W).astype(jnp.int32)  # [B]
+        blk = jnp.take_along_axis(
+            page_table, (slot // page)[:, None], axis=1
+        )[:, 0]
+        nb = blocks_leaf.shape[b_ax]
+        blk = jnp.where(blk == 0, nb, blk)  # sentinel rows: OOB, dropped
+        off = slot % page
+        # one written row per b: [.., B, rest]
+        val = jnp.take_along_axis(
+            dense_leaf,
+            slot.reshape((1,) * b_ax + (B, 1) + (1,) * (dense_leaf.ndim
+                                                        - b_ax - 2)),
+            axis=b_ax + 1,
+        )
+        val = jnp.squeeze(val, axis=b_ax + 1)
+        idx = (slice(None),) * b_ax + (blk, off)
+        return blocks_leaf.at[idx].set(val.astype(blocks_leaf.dtype))
+
+    def paired(path, blocks_leaf):
+        key = _leaf_key(path)
+        b_ax = blocks_leaf.ndim - _BASE_NDIM[key]
+        return put(blocks_leaf, _tree_get(dense, path), b_ax)
+
+    return jax.tree_util.tree_map_with_path(paired, paged)
+
+
+class PagedKVPool:
+    """Host-side allocator for a block pool: refcounts + free list.
+
+    The device block tree itself lives wherever the owner keeps it (the
+    decode pool threads it through donated jits; the disaggregated prefix
+    store pins it to the prefill slice) — this class owns only the
+    bookkeeping that makes shared prefixes safe: a block is reusable only
+    when its refcount reaches zero, so an evicting cache index can never
+    free a block a live request still reads. Block 0 is reserved as the
+    permanent zero sentinel and is never handed out.
+    """
+
+    def __init__(self, num_blocks: int, page_size: int):
+        if num_blocks < 2:
+            raise ValueError(f"num_blocks must be >= 2: {num_blocks}")
+        self.num_blocks = int(num_blocks)
+        self.page = int(page_size)
+        self.blocks = None  # optional owner-managed device tree
+        self.reset()
+
+    def reset(self):
+        import numpy as np
+
+        self.refs = np.zeros((self.num_blocks,), np.int32)
+        self.refs[0] = 1  # sentinel: permanently live
+        # pop() from the end -> ascending allocation order (deterministic)
+        self._free = list(range(self.num_blocks - 1, 0, -1))
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_blocks(self) -> int:
+        """Blocks currently referenced (excluding the sentinel)."""
+        return int((self.refs[1:] > 0).sum())
+
+    def alloc(self, n: int):
+        """Claim ``n`` blocks (refcount 1 each) or None if short."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self.refs[b] = 1
+        return out
+
+    def ref(self, ids):
+        for b in ids:
+            if b == 0:
+                continue
+            if self.refs[b] <= 0:
+                raise RuntimeError(f"ref of a free block {b}")
+            self.refs[b] += 1
+
+    def deref(self, ids) -> list:
+        """Drop one reference per id; returns the ids that became free."""
+        freed = []
+        for b in ids:
+            if b == 0:
+                continue
+            if self.refs[b] <= 0:
+                raise RuntimeError(f"deref of a free block {b}")
+            self.refs[b] -= 1
+            if self.refs[b] == 0:
+                self._free.append(int(b))
+                freed.append(int(b))
+        return freed
+
+
 def cache_logical_axes(cfg, sig, kv_seq_sharded: bool) -> dict:
     """Logical axes per cache entry (mirrors layer_cache_shapes)."""
     kind, _ = sig

@@ -202,6 +202,41 @@ class Model:
         logits = lm_head(params["embed"], x_last, self.cfg.vocab_size)
         return logits[:, 0], caches, lengths.astype(jnp.int32)
 
+    def prefill_suffix(self, params, batch, lengths, cached_lens, prior, *,
+                       shard_ctx=None):
+        """Suffix-only bucketed prefill over a cached prefix (paged reuse).
+
+        tokens [B, L] hold each row's UNCACHED suffix (right-padded,
+        ``lengths`` [B] real suffix lengths); ``prior`` is a cache-shaped
+        {"k","v"} tree [.., B, Pp, ..] of already-RoPE'd prefix KV and
+        ``cached_lens`` [B] says how much of it each row actually uses.
+        Queries run at absolute positions ``cached_lens[b] + i`` and attend
+        to (valid prior) ++ (causal suffix), so logits match a full prefill
+        of prefix+suffix bit-for-math (not bit-for-bit: different jit
+        shapes reassociate the bf16 sums). Returns
+        (first_logits [B,V], suffix_caches, total_lengths [B]) — the
+        returned caches hold ONLY the suffix KV; the caller splices them
+        after the cached prefix (attention-only stacks, like
+        prefill_bucketed).
+        """
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch, shard_ctx)
+        S = x.shape[1]
+        pos = cached_lens[:, None] + jnp.arange(S)[None, :]  # [B,S] absolute
+        x, _, caches = stack_apply_full(
+            params["decoder"], cfg, x, pos,
+            causal=True, want_cache=True, shard_ctx=shard_ctx,
+            remat=self.remat, groups=self.groups, q_chunk=self.q_chunk,
+            unroll=self.unroll, remat_policy=self.remat_policy,
+            prior=prior, prior_valid=cached_lens,
+        )
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        idx = jnp.clip(lengths - 1, 0, S - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = lm_head(params["embed"], x_last, cfg.vocab_size)
+        total = (cached_lens + lengths).astype(jnp.int32)
+        return logits[:, 0], caches, total
+
     def decode_step(self, params, caches, tokens, lengths, *, shard_ctx=None):
         """tokens: [B,1] -> (logits [B,V], new_caches, lengths+1)."""
         cfg = self.cfg

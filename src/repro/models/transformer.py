@@ -137,8 +137,16 @@ def apply_layer_full(
     enc_out=None,
     shard_ctx=None,
     q_chunk: int = 1024,
+    prior=None,
+    prior_valid=None,
 ):
-    """Returns (x, aux_loss, cache_or_None)."""
+    """Returns (x, aux_loss, cache_or_None).
+
+    ``prior`` ({"k","v"} leaves [B, Pp, Hkv, hd], RoPE'd at absolute
+    positions) + ``prior_valid`` [B] enable suffix prefill over a cached
+    prefix (paged prefix reuse); the caller must pass per-row absolute
+    ``positions`` to match. Attention-only (the serving tier gates archs).
+    """
     kind, is_moe = sig
     B, S, d = x.shape
     aux = jnp.zeros((), jnp.float32)
@@ -147,6 +155,8 @@ def apply_layer_full(
     h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
     if kind == "attn":
         if cfg.mla is not None:
+            if prior is not None:
+                raise ValueError("prefix-reuse prefill not supported for MLA")
             o, mla_cache = mla_prefill(
                 lp["attn"], cfg, h, positions, q_chunk=q_chunk,
                 window=cfg.sliding_window, shard_ctx=shard_ctx,
@@ -159,6 +169,9 @@ def apply_layer_full(
             o = chunked_attention(
                 q, k, v, causal=causal, window=cfg.sliding_window,
                 q_chunk=q_chunk, shard_ctx=shard_ctx,
+                prior_k=None if prior is None else prior["k"],
+                prior_v=None if prior is None else prior["v"],
+                prior_valid=prior_valid,
             )
             x = x + o.reshape(B, S, -1) @ lp["attn"]["wo"]
             if want_cache:
@@ -280,16 +293,27 @@ def stack_apply_full(
     q_chunk: int = 1024,
     unroll: bool = False,
     remat_policy: str = "full",
+    prior=None,
+    prior_valid=None,
 ):
-    """Train/prefill/encoder pass. Returns (x, aux_total, caches)."""
+    """Train/prefill/encoder pass. Returns (x, aux_total, caches).
+
+    ``prior`` is an optional cache-shaped tree (same grouping/stacking as
+    the returned caches) holding each layer's cached-prefix K/V; with
+    ``prior_valid`` [B] it turns this into a suffix prefill (see
+    apply_layer_full). When a group is scanned, the prior stack rides the
+    scan xs next to the params.
+    """
     groups = groups or layer_groups(cfg)
     aux_total = jnp.zeros((), jnp.float32)
     caches = {}
 
     for gi, g in enumerate(groups):
         gp = params[f"g{gi}"]
+        pg = None if prior is None else prior[f"g{gi}"]
 
-        def block(xc, lp):
+        def block(xc, lp_pg):
+            lp, pr = lp_pg if pg is not None else (lp_pg, None)
             aux_b = jnp.zeros((), jnp.float32)
             cache_b = {}
             for j, sig in enumerate(g.sigs):
@@ -297,6 +321,8 @@ def stack_apply_full(
                     lp[f"l{j}"], cfg, sig, xc, positions,
                     causal=causal, want_cache=want_cache, enc_out=enc_out,
                     shard_ctx=shard_ctx, q_chunk=q_chunk,
+                    prior=None if pr is None else pr[f"l{j}"],
+                    prior_valid=prior_valid,
                 )
                 aux_b = aux_b + aux
                 if want_cache:
@@ -304,13 +330,16 @@ def stack_apply_full(
             return xc, (aux_b, cache_b)
 
         if g.count == 1:
-            x, (aux_b, cache_b) = _maybe_remat(block, remat, remat_policy)(x, gp)
+            arg = (gp, pg) if pg is not None else gp
+            x, (aux_b, cache_b) = _maybe_remat(block, remat, remat_policy)(x, arg)
             caches[f"g{gi}"] = cache_b
             aux_total = aux_total + aux_b
         elif unroll:
             cache_list = []
             for i in range(g.count):
                 lp_i = jax.tree.map(lambda a: a[i], gp)
+                if pg is not None:
+                    lp_i = (lp_i, jax.tree.map(lambda a: a[i], pg))
                 x, (aux_b, cache_b) = _maybe_remat(block, remat, remat_policy)(x, lp_i)
                 aux_total = aux_total + aux_b
                 cache_list.append(cache_b)
@@ -319,8 +348,9 @@ def stack_apply_full(
                     lambda *xs: jnp.stack(xs), *cache_list
                 )
         else:
+            xs = (gp, pg) if pg is not None else gp
             x, (aux_s, cache_s) = jax.lax.scan(
-                _maybe_remat(block, remat, remat_policy), x, gp)
+                _maybe_remat(block, remat, remat_policy), x, xs)
             caches[f"g{gi}"] = cache_s
             aux_total = aux_total + jnp.sum(aux_s)
     return x, aux_total, (caches if want_cache else None)

@@ -44,6 +44,17 @@ tests.
                  each replica compiles/warms a fraction of the bucket
                  grid and same-bucket bursts batch into one padded
                  prefill.
+  prefix_cache : prefix-hit-probability routing for paged engines with
+                 shared-prefix reuse — each replica is scored by its own
+                 radix index's longest cached-prefix match against the
+                 request's prompt (``engine.prefix_lookup_tokens``, an
+                 LRU-neutral peek), and the request goes where the most
+                 prompt tokens are already resident (ties break by
+                 outstanding tokens). A request no replica has seen
+                 (all-zero scores) falls back to sticky first-page
+                 placement, so the NEXT request sharing its system
+                 prompt scores a hit on the replica that indexed this
+                 one instead of re-prefilling the prefix elsewhere.
 
 Routing happens at submit: the request joins the chosen replica's
 admission queue immediately, so the engine-level 'queue' stage (submit ->
@@ -148,7 +159,8 @@ class Router:
     index, so routing is deterministic given the submission sequence.
     """
 
-    POLICIES = ("round_robin", "jsq", "least_loaded", "affinity")
+    POLICIES = ("round_robin", "jsq", "least_loaded", "affinity",
+                "prefix_cache")
 
     def __init__(self, policy: str = "least_loaded"):
         if policy not in self.POLICIES:
@@ -158,6 +170,7 @@ class Router:
         self.policy = policy
         self._rr = 0
         self._affinity: dict = {}  # prefill bucket/shape key -> replica
+        self._prefix_home: dict = {}  # first prompt page -> replica
 
     def pick(self, req, replicas: list) -> int:
         if self.policy == "round_robin":
@@ -182,6 +195,8 @@ class Router:
                 key=lambda i: (replicas[i].outstanding_tokens,
                                -replicas[i].free_slots, i),
             )
+        if self.policy == "prefix_cache":
+            return self._pick_prefix_cache(req, replicas)
         # affinity: sticky pow2-bucket placement
         key = self._bucket_key(req, replicas[0].engine)
         if key not in self._affinity:
@@ -193,6 +208,37 @@ class Router:
                 key=lambda i: (counts[i], replicas[i].jobs, i),
             )
         return self._affinity[key]
+
+    def _pick_prefix_cache(self, req, replicas: list) -> int:
+        """Estimated prefix-hit routing: score each replica by how many
+        prompt tokens its radix index already holds (a peek — no LRU or
+        hit/miss distortion) and send the request to the deepest match;
+        among equally-deep matches, the least-loaded replica wins. When
+        no replica has any of the prompt (a cold system prompt, or
+        engines without prefix reuse scoring a flat 0), fall back to a
+        sticky map keyed on the prompt's FIRST page, so repeats of the
+        same system prompt converge on one replica and turn its future
+        lookups into hits instead of spraying cold prefills."""
+        scores = [
+            rep.engine.prefix_lookup_tokens(req.prompt_tokens)
+            if hasattr(rep.engine, "prefix_lookup_tokens") else 0
+            for rep in replicas
+        ]
+        if max(scores) > 0:
+            return min(
+                range(len(replicas)),
+                key=lambda i: (-scores[i],
+                               replicas[i].outstanding_tokens, i),
+            )
+        page = getattr(replicas[0].engine, "page", 16)
+        key = tuple(int(t) for t in req.prompt_tokens[:page])
+        if key not in self._prefix_home:
+            self._prefix_home[key] = min(
+                range(len(replicas)),
+                key=lambda i: (replicas[i].outstanding_tokens,
+                               replicas[i].jobs, i),
+            )
+        return self._prefix_home[key]
 
     def _bucket_key(self, req, engine):
         """The prefill shape the request admits into: its pow2 bucket on

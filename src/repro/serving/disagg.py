@@ -79,6 +79,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.transfer import (
     MODE_TRANSPORT,
     TransferMode,
+    _quantizes,
     kv_transfer,
     payload_wire_bytes,
     pod_take,
@@ -92,6 +93,8 @@ from repro.sharding.partition import place_on_slice, pod_slice_mesh
 
 # per-row slot metadata riding the handoff: lengths/next_token/slot/max_new
 _META_BYTES = 16
+# paged handoffs additionally carry cached_lens (the reused-prefix split)
+_META_BYTES_PAGED = 20
 
 
 def make_pod_mesh(npods: Optional[int] = None):
@@ -218,6 +221,11 @@ class DisaggregatedEngine(ServingEngine):
         self.handoffs = 0
         self.handoff_wire_bytes = 0  # bytes the collective actually moved
         self.handoff_request_bytes = 0  # useful bytes (true KV prefixes)
+        # paged reconciliation oracle: expected wire bytes from the HOST-
+        # SIDE admission plan alone (rows x suffix bucket x per-token wire
+        # bytes + metadata) — never reads the device payload, and must
+        # equal handoff_wire_bytes exactly at every prefix hit rate
+        self.handoff_payload_bytes = 0
         self.handoff_wall_s = 0.0
         self._xfer_jit: dict = {}
         self._xfer_warm: set = set()  # (mode, rows, prefix) extents warmed
@@ -227,7 +235,9 @@ class DisaggregatedEngine(ServingEngine):
         self._zero_shards: OrderedDict = OrderedDict()
         self._zero_bytes = 0
         self._zero_budget = sum(
-            leaf.nbytes for leaf in jax.tree.leaves(self.pool.caches)
+            leaf.nbytes for leaf in jax.tree.leaves(
+                self.pool.blocks if self.paged else self.pool.caches
+            )
         )
 
         # --- per-pod compute placement -------------------------------- #
@@ -270,6 +280,33 @@ class DisaggregatedEngine(ServingEngine):
         # both retrace per (extent, payload-shape) like the collective itself
         self._slice_jit = jax.jit(kvc.slice_cache, static_argnums=(1, 2))
         self._land_jit = jax.jit(self._land_impl)
+        if self.paged:
+            self._land_paged_jit = jax.jit(self._land_paged_impl)
+            # dense-shaped template (abstract, never materialized) for the
+            # byte accountants that sized payloads off the ring pool tree
+            self._dense_template = jax.eval_shape(
+                lambda: self.model.init_cache(self.max_batch, self.max_seq)
+            )
+        # prefill-side prefix store (paged reuse): suffix prefills gather
+        # their prior HERE, on the prefill pod — reused prefix KV never
+        # re-crosses the pod boundary. Its blocks pair 1:1 (by index page)
+        # with decode-pool blocks in the radix payloads.
+        if self.prefix_reuse:
+            self._store_pool = kvc.PagedKVPool(
+                self.pool.allocator.num_blocks, self.page
+            )
+            blocks = kvc.init_paged(
+                self.model.cache_specs(self.max_batch, self.max_seq),
+                self._store_pool.num_blocks, self.page,
+            )
+            if self.placement is not None:
+                blocks = jax.device_put(
+                    blocks, self.placement.prefill_sharding()
+                )
+            self._prefix_store_blocks = blocks
+            self._store_scatter_jit = jax.jit(
+                kvc.scatter_pages, donate_argnums=(0,)
+            )
 
         self.warmup = warmup
         if warmup:
@@ -371,7 +408,13 @@ class DisaggregatedEngine(ServingEngine):
 
     def request_handoff_bytes(self, true_len: int) -> int:
         """Wire bytes one request's KV prefix + slot metadata put on the
-        inter-stage hop under this deployment's mechanism."""
+        inter-stage hop under this deployment's mechanism (paged: the
+        ``true_len`` tokens that actually ride — the caller passes the
+        UNCACHED suffix length there, and the metadata row is wider)."""
+        if self.paged:
+            return _META_BYTES_PAGED + kvc.request_cache_nbytes(
+                self._dense_template, true_len, itemsize=self._wire_isz,
+            )
         return _META_BYTES + kvc.request_cache_nbytes(
             self.pool.caches, true_len, itemsize=self._wire_isz,
         )
@@ -383,8 +426,9 @@ class DisaggregatedEngine(ServingEngine):
         against."""
         meta = {k: jnp.zeros((self.max_batch,), jnp.int32)
                 for k in ("lengths", "next_tokens", "slot_idx", "max_new")}
+        dense = (self._dense_template if self.paged else self.pool.caches)
         return payload_wire_bytes(
-            {"caches": self.pool.caches, "meta": meta}, self.transfer_mode
+            {"caches": dense, "meta": meta}, self.transfer_mode
         )
 
     def _wire_isz(self, leaf) -> int:
@@ -457,6 +501,150 @@ class DisaggregatedEngine(ServingEngine):
             },
         }
 
+    def _wire_payload_paged(self, art: PrefillArtifact, n: int):
+        """The paged handoff's wire pytree: the bucket-width SUFFIX cache
+        sliced to ``n`` rows (seq already at the bucket — reused prefix KV
+        is not aboard) plus those rows' slot metadata, cached_lens
+        included. dest_blocks stay on the host: they index the decode
+        pool's block ids, pure control plane."""
+        return {
+            "caches": self._slice_jit(art.caches, n, art.bucket),
+            "meta": {
+                "lengths": art.lengths[:n],
+                "next_tokens": art.next_tokens[:n],
+                "slot_idx": jnp.asarray(art.slot_idx[:n]),
+                "max_new": art.max_new[:n],
+                "cached_lens": jnp.asarray(art.cached_lens[:n]),
+            },
+        }
+
+    def _land_paged_impl(self, caches, meta):
+        """Decode-side landing for a paged handoff: pad ROWS back to the
+        admission width (padding rows carry OOB slots and dest block 0, so
+        the paged splice drops them) — the seq dim stays at the suffix
+        bucket; the splice scatters pages, never a max_seq ring."""
+        caches = kvc.pad_cache_rows(caches, self.max_batch)
+        n = meta["lengths"].shape[0]
+        width = (0, self.max_batch - n)
+
+        def pad(x, fill=0):
+            return jnp.pad(x, width, constant_values=fill)
+
+        meta = {
+            "lengths": pad(meta["lengths"]),
+            "next_tokens": pad(meta["next_tokens"]),
+            "slot_idx": pad(meta["slot_idx"], self.max_batch),  # OOB
+            "max_new": pad(meta["max_new"]),
+            "cached_lens": pad(meta["cached_lens"]),
+        }
+        return caches, meta
+
+    def _paged_geometry_bytes(self, n: int, L: int) -> int:
+        """Expected wire bytes of an [n rows x L suffix tokens] paged
+        payload, from the admission plan alone: per-token KV wire bytes
+        (dense template, so it never touches the device payload) times the
+        refcount-trimmed extent, plus per-row metadata and the HOST_STAGED
+        per-leaf quantization scales. The reconciliation oracle
+        ``handoff_wire_bytes`` must match exactly."""
+        total = n * _META_BYTES_PAGED
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self._dense_template)[0]:
+            per_tok = leaf.size // (self.max_batch * self.max_seq)
+            total += n * L * per_tok * wire_itemsize(
+                leaf.dtype, self.transfer_mode
+            )
+            if (self.transfer_mode is TransferMode.HOST_STAGED
+                    and _quantizes(leaf.dtype)):
+                total += 4
+        return total
+
+    # ------------------------------------------------------------------ #
+    # prefill-side prefix store hooks (paged reuse)
+    # ------------------------------------------------------------------ #
+    def _store_alloc(self):
+        return self._store_pool if self.prefix_reuse else self.pool.allocator
+
+    def _store_deref(self, ids: list):
+        self._store_alloc().deref(ids)
+
+    def _prior_blocks(self):
+        return self._prefix_store_blocks
+
+    def _store_alloc_blocks(self, n: int) -> list:
+        """Allocate prefill-store blocks, evicting cold index pages under
+        pressure (each eviction releases BOTH payload sides)."""
+        while True:
+            got = self._store_pool.alloc(n)
+            if got is not None:
+                return got
+            payload = self.prefix_index.evict_lru()
+            if payload is None:
+                raise RuntimeError(
+                    "prefill-side prefix store exhausted with no evictable "
+                    "index pages"
+                )
+            self._evict_index_page(payload)
+
+    def _store_prepare(self, jobs: list, caches, L: int):
+        """Scatter each job's fully-in-prompt suffix pages into the
+        prefill-side store BEFORE the handoff, so future suffix prefills
+        gather their prior on the prefill pod without re-crossing the
+        wire. Returns job -> freshly allocated store block ids (rc=1 —
+        the index's reference if the page gets created, orphan-deref'd
+        otherwise in :meth:`_index_insert`)."""
+        if not self.prefix_reuse:
+            return None
+        page = self.page
+        dest = np.zeros((self.max_batch, L // page), np.int32)
+        ctx: dict = {}
+        for j, job in enumerate(jobs):
+            n_ins = len(job.req.prompt_tokens) // page
+            cpages = job.cached // page
+            store_ids = self._store_alloc_blocks(max(n_ins - cpages, 0))
+            ctx[id(job)] = store_ids
+            for k, p in enumerate(store_ids):
+                dest[j, k] = p
+        self._prefix_store_blocks = self._store_scatter_jit(
+            self._prefix_store_blocks, caches, jnp.asarray(dest)
+        )
+        return ctx
+
+    def _index_insert(self, jobs: list, store_ctx):
+        """Store-aware radix insert: page ``i``'s payload pairs the
+        prefill-store block (gathered by future suffix prefills) with the
+        decode-pool block (aliased into future rows' page tables).
+        Created pages keep the store block's alloc-time rc=1 as the
+        index's prefill-side reference and take one decode-side ref;
+        orphans — the page already indexed by a same-batch sibling, or
+        the row skipped after a mid-admission eviction — deref once and
+        free."""
+        if not self.prefix_reuse:
+            return
+        for job in jobs:
+            store_ids = store_ctx.get(id(job), []) if store_ctx else []
+            toks = job.req.prompt_tokens
+            n_ins = len(toks) // self.page
+            cpages = job.cached // self.page
+            if n_ins == 0:
+                continue
+            depth = len(self.prefix_index.match(toks, n_ins, peek=True))
+            if depth < cpages:
+                self._store_pool.deref(store_ids)
+                continue
+            payloads = (
+                [(job.p_ids[i], job.d_ids[i]) for i in range(cpages)]
+                + [(store_ids[i - cpages], job.pt_row[i])
+                   for i in range(cpages, n_ins)]
+            )
+            created = self.prefix_index.insert(toks, payloads, n_ins)
+            created_p = set()
+            for (p, d) in created:
+                created_p.add(p)
+                self.pool.allocator.ref([d])
+            self._store_pool.deref(
+                [p for p in store_ids if p not in created_p]
+            )
+
     # ------------------------------------------------------------------ #
     def _warm_admit(self, art: Optional[PrefillArtifact]):
         """Pre-trace the handoff chain — slice, tile, collective, land —
@@ -464,8 +652,15 @@ class DisaggregatedEngine(ServingEngine):
         landed all-dummy artifact so the decode-side splice compiles on
         decode-slice-committed inputs. Called from :meth:`warm` with an
         artifact produced by the real prefill jit, so shapes, dtypes, and
-        committed shardings all match the serving path exactly."""
+        committed shardings all match the serving path exactly.
+
+        Paged engines warm per suffix BUCKET (the seam is called once per
+        bucket from the base warm loop): every pow2 row extent at that
+        bucket width, plus the prefill-store scatter when reuse is on."""
         if art is None:  # exact-shape path: ragged per-request shapes
+            return
+        if self.paged:
+            self._warm_admit_paged(art)
             return
         prep, move = self._xfer(self.transfer_mode)
         landed_art = None
@@ -486,6 +681,108 @@ class DisaggregatedEngine(ServingEngine):
                 max_new=meta["max_new"],
             ))  # every row OOB: compiles the splice, writes nothing
 
+    def _warm_admit_paged(self, art: PrefillArtifact):
+        """Per-bucket paged extent warm: (rows_pow2 x this bucket) through
+        slice/tile/collective/land, one all-dummy splice (per-bucket splice
+        shapes), and the prefill-store scatter (dest 0 = sentinel drop)."""
+        prep, move = self._xfer(self.transfer_mode)
+        L = art.bucket
+        rows = sorted({min(_next_pow2(r), self.max_batch)
+                       for r in range(1, self.max_batch + 1)})
+        landed_art = None
+        for n in rows:
+            key = (self.transfer_mode, "paged", n, L)
+            if key in self._xfer_warm:
+                continue
+            landed = move(prep(self._wire_payload_paged(art, n)))
+            caches, meta = self._land_paged_jit(
+                landed["caches"], landed["meta"]
+            )
+            jax.block_until_ready(caches)
+            self._xfer_warm.add(key)
+            landed_art = (caches, meta)
+        if landed_art is not None:
+            caches, meta = landed_art
+            self.pool.splice(dataclasses.replace(
+                art, caches=caches, slot_idx=np.asarray(meta["slot_idx"]),
+                lengths=meta["lengths"], next_tokens=meta["next_tokens"],
+                max_new=meta["max_new"],
+            ))  # every row OOB + dest 0: compiles, writes nothing
+        if self.prefix_reuse:
+            self._prefix_store_blocks = self._store_scatter_jit(
+                self._prefix_store_blocks, art.caches,
+                jnp.zeros((self.max_batch, L // self.page), jnp.int32),
+            )
+
+    # ------------------------------------------------------------------ #
+    def _handoff_paged(self, art: PrefillArtifact):
+        """Paged pod-boundary handoff: move the bucket-width SUFFIX cache
+        only. Reused prefix KV already lives in decode-pool blocks (it
+        crossed the wire exactly once, when first computed), so the wire
+        carries ``rows_pow2 x suffix_bucket`` tokens — the refcount-
+        trimmed payload — and ``handoff_wire_bytes`` drops with the hit
+        rate while reconciling exactly against the host-side geometry
+        oracle ``handoff_payload_bytes``."""
+        n = min(_next_pow2(max(art.n_rows, 1)), len(art.slot_idx))
+        L = art.bucket
+        payload = self._wire_payload_paged(art, n)
+        prep, move = self._xfer(self.transfer_mode)
+        measured = self._measured()
+        key = (self.transfer_mode, "paged", n, L)
+        warm_s = 0.0
+        if key not in self._xfer_warm:
+            tw = time.perf_counter()
+            jax.block_until_ready(move(prep(payload)))
+            self._xfer_warm.add(key)
+            warm_s = time.perf_counter() - tw
+        tiled = prep(payload)
+        jax.block_until_ready(tiled)
+        t0 = time.perf_counter()
+        landed = move(tiled)
+        jax.block_until_ready(landed)
+        wall = time.perf_counter() - t0
+
+        wire_now = payload_wire_bytes(payload, self.transfer_mode)
+        self.handoffs += 1
+        self.handoff_wall_s += wall
+        self.handoff_wire_bytes += wire_now
+        self.handoff_payload_bytes += self._paged_geometry_bytes(n, L)
+        share = wall / max(len(art.reqs), 1)
+        # per-request useful bytes = each row's UNCACHED suffix (its reused
+        # prefix rode an earlier handoff; charging it again would double-
+        # count the very bytes the prefix cache saved)
+        total_lens = np.asarray(landed["meta"]["lengths"])
+        req_bytes = [
+            _META_BYTES_PAGED + kvc.request_cache_nbytes(
+                art.caches,
+                int(total_lens[j]) - int(art.cached_lens[j]),
+                itemsize=self._wire_isz,
+            )
+            for j in range(len(art.reqs))
+        ]
+        tot_bytes = max(sum(req_bytes), 1)
+        for req, nbytes in zip(art.reqs, req_bytes):
+            rec = self._records[req.request_id]
+            self.handoff_request_bytes += nbytes
+            wire_share = wire_now * nbytes / tot_bytes
+            rec.transfer_wall_s += wall
+            rec.add(
+                "transfer",
+                share if measured
+                else self.profile.handoff_time(self.hop, wire_share),
+            )
+            if self.hop is Transport.TCP:
+                rec.cpu_s += wire_share * self.profile.tcp_cpu_per_byte
+        caches, meta = self._land_paged_jit(landed["caches"], landed["meta"])
+        # dest_blocks/cached_lens pass through untouched: host control
+        # plane, aligned with the artifact's (unchanged) row order
+        art = dataclasses.replace(
+            art, caches=caches,
+            slot_idx=np.asarray(meta["slot_idx"]), lengths=meta["lengths"],
+            next_tokens=meta["next_tokens"], max_new=meta["max_new"],
+        )
+        return art, wall + warm_s
+
     # ------------------------------------------------------------------ #
     def _handoff(self, art: PrefillArtifact):
         """Move the prefill artifact's VALID KV PREFIX across the pod
@@ -496,6 +793,8 @@ class DisaggregatedEngine(ServingEngine):
         the rows' slot metadata) before the collective, so the wire carries
         only live cache bytes. The landed prefix regrows to the ring width
         on the decode side, after the wire."""
+        if self.paged:
+            return self._handoff_paged(art)
         n, prefix = self._prefix_extent(art)
         payload = self._wire_payload(art, n, prefix)
         prep, move = self._xfer(self.transfer_mode)

@@ -78,6 +78,7 @@ from repro.core.profiler import ProfileStore, RequestRecord
 from repro.core.transport import PAPER_A2, Transport, TransportProfile
 from repro.models import Model
 from repro.models import kvcache as kvc
+from repro.serving.prefix import RadixPrefixIndex
 from repro.serving.request import Request, Response
 
 
@@ -120,6 +121,27 @@ class PrefillArtifact:
     slots: list  # pool slot per request
     n_rows: int = 0  # occupied leading rows (== len(reqs))
     prefix_len: int = 0  # max true cache length among occupied rows
+    # paged-mode extras: ``caches`` then holds the SUFFIX cache at bucket
+    # width (never grown to max_seq); the splice scatters its pages into
+    # the block pool at ``dest_blocks`` (0 => dropped), and ``cached_lens``
+    # records each row's reused prefix (its KV already lives in shared
+    # blocks, so it never rides the artifact — or, disaggregated, the wire)
+    dest_blocks: Optional[np.ndarray] = None  # [npad, bucket/page] int32
+    cached_lens: Optional[np.ndarray] = None  # [npad] int32 reused prefix
+    bucket: int = 0  # suffix bucket width (paged handoff extent)
+
+
+@dataclasses.dataclass
+class _PagedJob:
+    """Per-request admission bookkeeping for a paged prefill group."""
+
+    req: Request
+    slot: int
+    cached: int  # reused prefix tokens (page-aligned)
+    p_ids: list  # prior-side blocks gathered for the suffix prefill
+    d_ids: list  # shared decode-side blocks (the row's pt prefix)
+    own: list  # freshly-allocated blocks (suffix + decode growth)
+    pt_row: list  # d_ids + own = the row's page table
 
 
 class DecodePool:
@@ -137,13 +159,30 @@ class DecodePool:
     def __init__(self, model: Model, *, max_batch: int, max_seq: int,
                  eos_token: Optional[int], inflight: int,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0, paged: bool = False,
+                 page_size: int = 16, cache_blocks: Optional[int] = None):
         self.model = model
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.inflight = inflight
         self.slots: list[Optional[Request]] = [None] * max_batch
         self.eos_arr = jnp.int32(eos_token if eos_token is not None else -1)
+        # paged mode: the ring pool becomes a block pool + per-slot page
+        # tables (host-built, pushed before each dispatch). Block count =
+        # sentinel + worst-case live rows + cache_blocks headroom the
+        # prefix index can keep warm (default: another full pool's worth).
+        self.paged = bool(paged)
+        self.page = int(page_size)
+        if paged:
+            if max_seq % self.page:
+                raise ValueError(
+                    f"max_seq {max_seq} must be a multiple of page_size "
+                    f"{page_size}"
+                )
+            self.pages_per_seq = max_seq // self.page
+            need = max_batch * self.pages_per_seq
+            extra = need if cache_blocks is None else int(cache_blocks)
+            self.allocator = kvc.PagedKVPool(1 + need + extra, self.page)
         # device-side sampling: temperature 0 keeps the greedy argmax path
         # (the test baseline); temperature > 0 samples inside the jitted
         # step from top_k-filtered logits with a PRNG key threaded through
@@ -158,19 +197,43 @@ class DecodePool:
         self.window: deque[_InFlight] = deque()
         self._sharding = None  # optional committed placement (pod slice)
         self._init_state()
-        self._step_jit = jax.jit(self._step_impl, donate_argnums=(1,))
-        self._splice_jit = jax.jit(self._splice_impl, donate_argnums=(0,))
+        if self.paged:
+            self._step_jit = jax.jit(self._step_paged_impl, donate_argnums=(1,))
+            self._splice_jit = jax.jit(self._splice_paged_impl,
+                                       donate_argnums=(0,))
+        else:
+            self._step_jit = jax.jit(self._step_impl, donate_argnums=(1,))
+            self._splice_jit = jax.jit(self._splice_impl, donate_argnums=(0,))
 
     # every device-state array the pool owns: _init_state (re)builds them
     # and place() commits them — keep the two in sync through this tuple
     _STATE_FIELDS = ("caches", "lengths", "tokens", "gen", "maxn", "done",
                      "eos_arr", "key")
 
+    def _state_field_names(self) -> tuple:
+        if self.paged:  # the block pool + page table replace the ring tree
+            return tuple(f for f in self._STATE_FIELDS if f != "caches") + (
+                "blocks", "page_table")
+        return self._STATE_FIELDS
+
     def _init_state(self):
         """(Re)build the device-side slot state (the ``_STATE_FIELDS``
         arrays, minus the constant eos_arr): empty pool, all slots done.
         Re-placed onto the committed sharding when one is set."""
-        self.caches = self.model.init_cache(self.max_batch, self.max_seq)
+        if self.paged:
+            self.caches = None
+            self.blocks = kvc.init_paged(
+                self.model.cache_specs(self.max_batch, self.max_seq),
+                self.allocator.num_blocks, self.page,
+            )
+            self.pt_host = np.zeros((self.max_batch, self.pages_per_seq),
+                                    np.int32)
+            self.page_table = jnp.asarray(self.pt_host)
+            self._pt_dirty = False
+            self._slot_blocks: list[list] = [[] for _ in range(self.max_batch)]
+            self.allocator.reset()
+        else:
+            self.caches = self.model.init_cache(self.max_batch, self.max_seq)
         self.lengths = jnp.zeros((self.max_batch,), jnp.int32)
         self.tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
         self.gen = jnp.zeros((self.max_batch,), jnp.int32)
@@ -189,7 +252,7 @@ class DecodePool:
         executes on — exactly that slice's devices, since jit placement
         follows its committed arguments."""
         self._sharding = sharding
-        for name in self._STATE_FIELDS:
+        for name in self._state_field_names():
             setattr(self, name, jax.device_put(getattr(self, name), sharding))
 
     def reset_state(self):
@@ -245,6 +308,53 @@ class DecodePool:
             lg = jnp.where(lg < kth, -jnp.inf, lg)
         return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
 
+    def _step_paged_impl(self, params, blocks, page_table, tokens, lengths,
+                         gen, maxn, done, eos, key):
+        """Paged decode step: gather -> ring decode -> scatter one token.
+
+        The per-row dense caches are materialized from the block pool
+        through the page table, the UNCHANGED ``Model.decode_step`` runs on
+        them (so the math — and at temperature 0 the token stream — is
+        bitwise the ring path's: unallocated pages gather the zero
+        sentinel, exactly what grow_cache pads), and only the ONE ring slot
+        the step wrote is scattered back per row. Freed slots' page-table
+        rows are zero, so their frozen-lane writes drop at the sentinel
+        redirect. The TPU-optimal variant that skips the gather entirely is
+        ``kernels.ops.paged_decode_attention`` (equivalence-tested); this
+        reference path stays pure-jnp like the model's.
+        """
+        active = ~done
+        dense = kvc.gather_pages(blocks, page_table)
+        logits, dense, lengths2 = self.model.decode_step(
+            params, dense, tokens, lengths
+        )
+        blocks = kvc.scatter_token(blocks, dense, lengths, page_table)
+        if self.temperature > 0.0:
+            key, sub = jax.random.split(key)
+        else:
+            sub = key
+        next_tok = self._sample(logits, sub)
+        next_tok = jnp.where(active, next_tok, tokens[:, 0])
+        gen = gen + active.astype(jnp.int32)
+        done = done | (gen >= maxn) | (active & (next_tok == eos))
+        lengths = jnp.where(active, lengths2, lengths)
+        return next_tok[:, None], blocks, lengths, gen, done, key
+
+    def _splice_paged_impl(self, blocks, suffix, dest_blocks, slots,
+                           true_lens, next_toks, maxn_new, lengths, tokens,
+                           gen, done, maxn):
+        """Paged admission: scatter the bucket-width suffix cache into the
+        block pool page-wise, plus the same per-slot state updates as the
+        ring splice. Dummy rows carry dest block 0 (the zero sentinel) and
+        slot index max_batch — both dropped by their scatters."""
+        blocks = kvc.scatter_pages(blocks, suffix, dest_blocks)
+        lengths = lengths.at[slots].set(true_lens)
+        tokens = tokens.at[slots, 0].set(next_toks)
+        gen = gen.at[slots].set(1)
+        done = done.at[slots].set(maxn_new <= 1)
+        maxn = maxn.at[slots].set(maxn_new)
+        return blocks, lengths, tokens, gen, done, maxn
+
     def _splice_impl(self, pool, group, slots, true_lens, next_toks, maxn_new,
                      lengths, tokens, gen, done, maxn):
         """Scatter a (max_seq-grown) prefill cache into ``slots``, updating
@@ -288,12 +398,54 @@ class DecodePool:
 
     def splice(self, art: PrefillArtifact):
         """Admit a prefill artifact (local or transferred) into the pool."""
+        if self.paged:
+            (self.blocks, self.lengths, self.tokens, self.gen, self.done,
+             self.maxn) = self._splice_jit(
+                self.blocks, art.caches, jnp.asarray(art.dest_blocks),
+                jnp.asarray(art.slot_idx), art.lengths, art.next_tokens,
+                art.max_new, self.lengths, self.tokens, self.gen, self.done,
+                self.maxn,
+            )
+            return
         (self.caches, self.lengths, self.tokens, self.gen, self.done,
          self.maxn) = self._splice_jit(
             self.caches, art.caches, jnp.asarray(art.slot_idx), art.lengths,
             art.next_tokens, art.max_new, self.lengths, self.tokens,
             self.gen, self.done, self.maxn,
         )
+
+    # ------------------------------------------------------------------ #
+    # paged page-table plumbing (host-authored, device-consumed)
+    # ------------------------------------------------------------------ #
+    def set_row(self, slot: int, blocks_list: list):
+        """Install a slot's page table row (admission). The device copy is
+        pushed lazily before the next dispatch; steps already in flight
+        read the OLD table, whose entries for this row are zero — their
+        writes drop at the sentinel, so a stale window is harmless."""
+        self.pt_host[slot, :] = 0
+        self.pt_host[slot, : len(blocks_list)] = blocks_list
+        self._pt_dirty = True
+        self._slot_blocks[slot] = list(blocks_list)
+
+    def release_slot(self, slot: int):
+        """Drop a finished row's block references and zero its page-table
+        row. Shared prefix blocks survive as long as the prefix index (or
+        another row) still holds them — the refcount, not the slot, owns
+        block lifetime."""
+        if not self.paged:
+            return
+        self.allocator.deref(self._slot_blocks[slot])
+        self._slot_blocks[slot] = []
+        self.pt_host[slot, :] = 0
+        self._pt_dirty = True
+
+    def _sync_pt(self):
+        if self._pt_dirty:
+            pt = jnp.asarray(self.pt_host)
+            if self._sharding is not None:
+                pt = jax.device_put(pt, self._sharding)
+            self.page_table = pt
+            self._pt_dirty = False
 
     def fill_one(self, params, limit: Optional[int] = None) -> bool:
         """Dispatch one decode step if the in-flight window has room.
@@ -307,11 +459,20 @@ class DecodePool:
                                                              limit))
         if len(self.window) >= cap:
             return False
-        (self.tokens, self.caches, self.lengths, self.gen,
-         self.done, self.key) = self._step_jit(
-            params, self.caches, self.tokens, self.lengths,
-            self.gen, self.maxn, self.done, self.eos_arr, self.key,
-        )
+        if self.paged:
+            self._sync_pt()
+            (self.tokens, self.blocks, self.lengths, self.gen,
+             self.done, self.key) = self._step_jit(
+                params, self.blocks, self.page_table, self.tokens,
+                self.lengths, self.gen, self.maxn, self.done, self.eos_arr,
+                self.key,
+            )
+        else:
+            (self.tokens, self.caches, self.lengths, self.gen,
+             self.done, self.key) = self._step_jit(
+                params, self.caches, self.tokens, self.lengths,
+                self.gen, self.maxn, self.done, self.eos_arr, self.key,
+            )
         self.window.append(_InFlight(self.tokens, self.done, tuple(self.slots)))
         return True
 
@@ -357,6 +518,10 @@ class ServingEngine:
         temperature: float = 0.0,
         top_k: int = 0,
         sample_seed: int = 0,
+        paged: bool = False,
+        page_size: int = 16,
+        cache_blocks: Optional[int] = None,
+        prefix_reuse: bool = True,
     ):
         self.model = model
         self.params = params
@@ -399,6 +564,41 @@ class ServingEngine:
                 "device-side sampling requires the fast path (the legacy "
                 "loop argmaxes on host)"
             )
+        # paged KV pool: fixed-size blocks + per-slot page tables, with the
+        # ring pool kept as the A/B baseline (paged=False). Rides the
+        # bucketed fast path only — the exact/legacy paths splice max_seq
+        # ring trees.
+        self.paged = bool(paged)
+        self.page = int(page_size)
+        if self.paged and not self.bucketed_prefill:
+            raise ValueError(
+                "paged KV pool requires the bucketed fast path "
+                "(attention-only stack, legacy=False, bucketed_prefill=True)"
+            )
+        if self.paged and self.min_bucket % self.page:
+            raise ValueError(
+                f"min_bucket {self.min_bucket} must be a multiple of "
+                f"page_size {self.page} (suffix buckets scatter page-wise)"
+            )
+        # shared-prefix reuse rides the paged pool; MLA suffix prefill can't
+        # consume a gathered latent prior, so MLA pages without reuse
+        self.prefix_reuse = bool(
+            self.paged and prefix_reuse and model.cfg.mla is None
+        )
+        self.prefix_index = (RadixPrefixIndex(self.page)
+                             if self.prefix_reuse else None)
+        # prefill telemetry: total vs uncached prompt tokens. The ring path
+        # tracks the same counters (everything uncached) so A/B runs share
+        # a schema; with reuse on, uncached is what prefill actually paid.
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_uncached = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        # prefill sampling key: its own stream (decoupled from the decode
+        # pool's by fold_in), only ever consumed when temperature > 0
+        self.prefill_key = jax.random.fold_in(
+            jax.random.PRNGKey(sample_seed), 1
+        )
         self.store = ProfileStore()
 
         self.queue: deque[Request] = deque()
@@ -406,6 +606,7 @@ class ServingEngine:
             model, max_batch=max_batch, max_seq=max_seq,
             eos_token=eos_token, inflight=self.inflight,
             temperature=temperature, top_k=top_k, sample_seed=sample_seed,
+            paged=self.paged, page_size=page_size, cache_blocks=cache_blocks,
         )
         self._records: dict[int, RequestRecord] = {}
 
@@ -422,6 +623,8 @@ class ServingEngine:
         )
         self._prefill_bucket_jit = jax.jit(self._prefill_bucket_impl)
         self._prefill_exact_jit = jax.jit(self._prefill_exact_impl)
+        self._prefill_paged_jit = jax.jit(self._prefill_paged_impl)
+        self._prefill_suffix_jit = jax.jit(self._prefill_suffix_impl)
         self._prefill_shapes: set = set()
         self._prefill_cache = {}  # legacy per-(S, features) jit cache
 
@@ -469,8 +672,11 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
     # jitted prefill bodies
     # ------------------------------------------------------------------ #
-    def _prefill_bucket_impl(self, params, tokens, lengths):
-        """Padded-bucket prefill + greedy first token, one dispatch.
+    def _prefill_bucket_impl(self, params, tokens, lengths, key):
+        """Padded-bucket prefill + first token sampled on device (argmax at
+        temperature 0 — the token-identity baseline — else the same
+        temperature/top-k categorical the decode step uses, from the
+        engine's own prefill key stream).
 
         The cache ring dim is grown to max_seq HERE, inside the same jit:
         the admission splice then sees one fixed shape regardless of bucket,
@@ -480,7 +686,39 @@ class ServingEngine:
             params, {"tokens": tokens}, lengths
         )
         caches = kvc.grow_cache(caches, self.max_seq)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches, lens
+        return self.pool._sample(logits, key), caches, lens
+
+    def _prefill_paged_impl(self, params, tokens, lengths, key):
+        """Paged-bucket prefill: same padded prefill + device sampling, but
+        the cache stays at BUCKET width — the paged splice scatters its
+        pages straight into the block pool, so nothing grows to max_seq."""
+        logits, caches, lens = self.model.prefill_bucketed(
+            params, {"tokens": tokens}, lengths
+        )
+        return self.pool._sample(logits, key), caches, lens
+
+    def _prefill_suffix_impl(self, params, blocks, prior_pt, tokens, lengths,
+                             cached, key):
+        """Suffix prefill over a reused prefix: the prior KV is gathered
+        from the block pool THROUGH the page table inside the same jit (the
+        shared blocks never copy host-side), and suffix queries attend to
+        prior + suffix keys at per-row absolute positions. Returns the
+        bucket-width SUFFIX cache; the reused prefix never moves again."""
+        prior = kvc.gather_pages(blocks, prior_pt)
+        logits, caches, lens = self.model.prefill_suffix(
+            params, {"tokens": tokens}, lengths, cached, prior
+        )
+        return self.pool._sample(logits, key), caches, lens
+
+    def _next_prefill_key(self):
+        """Advance the prefill sampling stream (one split per prefill
+        dispatch). Temperature 0 never consumes entropy — the key passes
+        through unsplit, so greedy runs stay bit-stable regardless of how
+        many admissions preceded any given one."""
+        if self.pool.temperature == 0.0:
+            return self.prefill_key
+        self.prefill_key, sub = jax.random.split(self.prefill_key)
+        return sub
 
     def _prefill_exact_impl(self, params, batch):
         """Exact-shape prefill (feature payloads / non-bucketable archs),
@@ -508,6 +746,21 @@ class ServingEngine:
                 f"prompt length {len(req.prompt_tokens)} exceeds max_seq "
                 f"{self.max_seq}"
             )
+        if self.paged:
+            if req.features is not None:
+                raise ValueError(
+                    "paged KV pool serves token prompts only (feature "
+                    "payloads take the exact-shape ring path)"
+                )
+            if len(req.prompt_tokens) + req.max_new_tokens > self.max_seq:
+                # the ring pool wraps a long generation over its own oldest
+                # positions; a paged row may SHARE its prefix blocks, so
+                # wrapping would corrupt other readers — reject instead
+                raise ValueError(
+                    f"prompt + max_new ({len(req.prompt_tokens)} + "
+                    f"{req.max_new_tokens}) exceeds max_seq {self.max_seq}: "
+                    "the paged pool never ring-wraps"
+                )
         rec = RequestRecord(
             request_id=req.request_id, client_id=req.client_id,
             priority=req.priority, t_issue=req.t_arrival,
@@ -569,7 +822,15 @@ class ServingEngine:
         if self.bucketed_prefill:
             for L in self.bucket_grid():
                 art = self._warm_bucket(L)
-        self._warm_admit(art)
+                if self.paged:
+                    # paged splice/handoff shapes follow the bucket width
+                    # (the suffix cache is never grown to max_seq), so the
+                    # admission path warms once per bucket, not once total
+                    self._warm_admit(art)
+                    if self.prefix_reuse:
+                        self._warm_suffix(L)
+        if not self.paged:
+            self._warm_admit(art)
         # the decode step compiles once; its ring writes land in rows the
         # next real splice overwrites, but reset anyway for a bit-pristine
         # pool
@@ -585,8 +846,21 @@ class ServingEngine:
         npad = self.max_batch
         toks = jnp.asarray(np.zeros((npad, L), np.int32))
         lens = jnp.asarray(np.ones((npad,), np.int32))
+        if self.paged:
+            next_toks, cache1, lens_d = self._prefill_paged_jit(
+                self.prefill_params, toks, lens, self.prefill_key
+            )
+            self._prefill_shapes.add(("paged", L))
+            return PrefillArtifact(
+                cache1, np.full((npad,), npad, np.int32),  # every row OOB
+                lens_d, next_toks, jnp.asarray(np.ones((npad,), np.int32)),
+                [], [], n_rows=0, prefix_len=1,
+                # dest block 0 = zero sentinel: the splice writes nothing
+                dest_blocks=np.zeros((npad, L // self.page), np.int32),
+                cached_lens=np.zeros((npad,), np.int32), bucket=L,
+            )
         next_toks, cache1, lens_d = self._prefill_bucket_jit(
-            self.prefill_params, toks, lens
+            self.prefill_params, toks, lens, self.prefill_key
         )
         self._prefill_shapes.add(("bucket", L))
         return PrefillArtifact(
@@ -594,6 +868,23 @@ class ServingEngine:
             lens_d, next_toks, jnp.asarray(np.ones((npad,), np.int32)),
             [], [], n_rows=0, prefix_len=1,
         )
+
+    def _warm_suffix(self, L: int):
+        """Compile the suffix-prefill jit for bucket ``L``: the prior is
+        gathered from the pristine block pool through an all-sentinel page
+        table (reads zeros), and the output shapes match the plain paged
+        bucket's, so the splice jit entry is already warm."""
+        npad = self.max_batch
+        out = self._prefill_suffix_jit(
+            self.prefill_params, self._prior_blocks(),
+            jnp.asarray(np.zeros((npad, self.pool.pages_per_seq), np.int32)),
+            jnp.asarray(np.zeros((npad, L), np.int32)),
+            jnp.asarray(np.ones((npad,), np.int32)),
+            jnp.asarray(np.zeros((npad,), np.int32)),
+            self.prefill_key,
+        )
+        jax.block_until_ready(out[0])
+        self._prefill_shapes.add(("suffix", L))
 
     def _warm_admit(self, art: Optional[PrefillArtifact]):
         """Warm the admission path for one all-dummy artifact. The fused
@@ -636,6 +927,9 @@ class ServingEngine:
         for i in sorted(order, reverse=True):
             del self.queue[i]
 
+        if self.paged:
+            self._admit_paged(picked, free)
+            return
         free_it = iter(free)
         if not self.bucketed_prefill:
             # exact-shape path still initializes the device-side decode
@@ -671,9 +965,12 @@ class ServingEngine:
             lens[j] = s
             maxn[j] = req.max_new_tokens
             slot_idx[j] = slot
+        self.prefill_tokens_total += int(lens[:n].sum())
+        self.prefill_tokens_uncached += int(lens[:n].sum())
         t0 = time.perf_counter()
         next_toks, cache1, lens_d = self._prefill_bucket_jit(
-            self.prefill_params, jnp.asarray(toks), jnp.asarray(lens)
+            self.prefill_params, jnp.asarray(toks), jnp.asarray(lens),
+            self._next_prefill_key(),
         )
         art = PrefillArtifact(cache1, slot_idx, lens_d, next_toks,
                               jnp.asarray(maxn), reqs, list(slots),
@@ -702,11 +999,15 @@ class ServingEngine:
         batch = {"tokens": toks}
         if req.features is not None:
             batch["features"] = jnp.asarray(req.features)
+        self.prefill_tokens_total += len(req.prompt_tokens)
+        self.prefill_tokens_uncached += len(req.prompt_tokens)
         t0 = time.perf_counter()
         logits, cache1, lengths1 = self._prefill_exact_jit(
             self.prefill_params, batch
         )
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # eager sample (the exact path compiles per ragged shape anyway);
+        # temperature 0 stays the argmax baseline bit-for-bit
+        next_tok = self.pool._sample(logits, self._next_prefill_key())
         # feature frames (vlm) prepend to the token sequence, so the cache's
         # true length is frames + prompt — len(prompt_tokens) alone would
         # let a pod handoff slice live KV off the wire. Derived host-side
@@ -734,6 +1035,211 @@ class ServingEngine:
         self._place(req, slot)
         self._t_mark = req.t_first_token  # prefill time is not "inference"
 
+    # ------------------------------------------------------------------ #
+    # Paged admission: prefix match -> block plan -> grouped prefill
+    # ------------------------------------------------------------------ #
+    def _admit_paged(self, picked: list, free: list):
+        """Plan every picked request's page table, then prefill in groups.
+
+        All prefix MATCHES happen before any INSERT, so two requests
+        sharing a prefix admitted in the same batch can't false-match
+        pages whose KV this very admission is still computing — the second
+        request recomputes the shared prefix once; reuse starts at the
+        next admission. Matched blocks are refcount-pinned here (the
+        d-side for the row's lifetime, the p-side until its suffix jit
+        has the prior in hand), so index eviction under pool pressure can
+        never free KV a picked request is about to read.
+        """
+        page = self.page
+        jobs: list[_PagedJob] = []
+        for req, slot in zip(picked, free):
+            P = len(req.prompt_tokens)
+            p_ids: list = []
+            d_ids: list = []
+            cached = 0
+            if self.prefix_reuse:
+                # cap the match below the full prompt: at least one suffix
+                # token must remain to produce the first-token logits
+                payloads = self.prefix_index.match(
+                    req.prompt_tokens, (P - 1) // page
+                )
+                if payloads:
+                    cached = len(payloads) * page
+                    p_ids = [p for (p, _) in payloads]
+                    d_ids = [d for (_, d) in payloads]
+                    self._store_alloc().ref(p_ids)
+                    self.pool.allocator.ref(d_ids)
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += cached
+            n_pages = -(-(P + req.max_new_tokens) // page)
+            own = self._alloc_blocks(n_pages - cached // page)
+            pt_row = d_ids + own
+            self.pool.set_row(slot, pt_row)
+            self.prefill_tokens_total += P
+            self.prefill_tokens_uncached += P - cached
+            jobs.append(_PagedJob(req, slot, cached, p_ids, d_ids, own,
+                                  pt_row))
+        groups: dict[tuple, list[_PagedJob]] = {}
+        for job in jobs:
+            L = self._bucket(len(job.req.prompt_tokens) - job.cached)
+            groups.setdefault((L, job.cached > 0), []).append(job)
+        for (L, has_prior), gjobs in sorted(groups.items()):
+            self._prefill_paged_group(L, has_prior, gjobs)
+
+    def _alloc_blocks(self, n: int) -> list:
+        """Allocate ``n`` fresh blocks, LRU-evicting cold prefix-index
+        pages under pool pressure. Eviction only drops the INDEX's
+        references — a block a live row still reads is refcount-protected
+        and stays resident until its last reader releases it."""
+        while True:
+            got = self.pool.allocator.alloc(n)
+            if got is not None:
+                return got
+            payload = (self.prefix_index.evict_lru()
+                       if self.prefix_reuse else None)
+            if payload is None:
+                raise RuntimeError(
+                    "paged KV pool exhausted with no evictable prefix "
+                    "pages; raise cache_blocks or lower max_batch"
+                )
+            self._evict_index_page(payload)
+
+    def _evict_index_page(self, payload):
+        """Drop the index's references on one evicted page (fused engine:
+        both payload sides name the same decode-pool block)."""
+        p, d = payload
+        self._store_alloc().deref([p])
+        self.pool.allocator.deref([d])
+
+    def _index_insert(self, jobs: list, store_ctx):
+        """Index each admitted prompt's fully-in-prompt pages.
+
+        Existing pages keep their first writer's blocks (matches ref THOSE
+        at admission); only newly-created nodes take references — one per
+        payload side — so the index keeps a released slot's prefix KV
+        alive for future hits. A row whose matched interior was LRU-evicted
+        during this very admission's allocations is skipped: its chain
+        would root orphaned payloads the index can no longer reach.
+        """
+        if not self.prefix_reuse:
+            return
+        for job in jobs:
+            toks = job.req.prompt_tokens
+            n_ins = len(toks) // self.page
+            if n_ins == 0:
+                continue
+            depth = len(self.prefix_index.match(toks, n_ins, peek=True))
+            if depth < job.cached // self.page:
+                continue
+            payloads = [(job.pt_row[i], job.pt_row[i])
+                        for i in range(n_ins)]
+            created = self.prefix_index.insert(toks, payloads, n_ins)
+            for (p, d) in created:
+                self._store_alloc().ref([p])
+                self.pool.allocator.ref([d])
+
+    # hooks the disaggregated tier overrides: the prior side of a reused
+    # prefix lives wherever prefill runs (fused: the decode pool itself;
+    # disagg: a prefill-pod block store, so suffix prefill never re-crosses
+    # the pod boundary for prefix KV)
+    def _store_alloc(self):
+        return self.pool.allocator
+
+    def _store_deref(self, ids: list):
+        self.pool.allocator.deref(ids)
+
+    def _prior_blocks(self):
+        return self.pool.blocks
+
+    def _store_prepare(self, jobs: list, caches, L: int):
+        """Seam before the handoff plans wire bytes (disagg stashes the
+        suffix cache into the prefill-side store here). Fused: no-op."""
+        return None
+
+    def prefix_lookup_tokens(self, tokens) -> int:
+        """Router scoring hook: matched prefix length in tokens, LRU- and
+        counter-neutral (a peek, not a hit). 0 when reuse is off."""
+        if not self.prefix_reuse:
+            return 0
+        return self.prefix_index.lookup_tokens(tokens)
+
+    def _prefill_paged_group(self, L: int, has_prior: bool, jobs: list):
+        """One padded (suffix-)prefill + paged splice for a group of
+        admissions sharing a suffix bucket.
+
+        Groups with no reused prefix run the plain paged prefill — bitwise
+        the ring bucket path's math. Groups with a prior gather it from the
+        block pool inside the suffix jit. Either way the artifact carries
+        the bucket-width SUFFIX cache only: reused prefix KV never moves
+        again (and, disaggregated, never re-rides the wire).
+        """
+        page = self.page
+        n = len(jobs)
+        npad = self.max_batch
+        toks = np.zeros((npad, L), np.int32)
+        lens = np.zeros((npad,), np.int32)
+        cached = np.zeros((npad,), np.int32)
+        maxn = np.zeros((npad,), np.int32)
+        slot_idx = np.full((npad,), self.max_batch, np.int32)  # OOB => drop
+        dest = np.zeros((npad, L // page), np.int32)  # 0 => sentinel drop
+        prior_pt = np.zeros((npad, self.pool.pages_per_seq), np.int32)
+        for j, job in enumerate(jobs):
+            suffix = job.req.prompt_tokens[job.cached:]
+            s = len(suffix)
+            toks[j, :s] = suffix
+            lens[j] = s
+            cached[j] = job.cached
+            maxn[j] = job.req.max_new_tokens
+            slot_idx[j] = job.slot
+            cpages = job.cached // page
+            for k in range(L // page):
+                if cpages + k < len(job.pt_row):
+                    dest[j, k] = job.pt_row[cpages + k]
+            prior_pt[j, : len(job.p_ids)] = job.p_ids
+        t0 = time.perf_counter()
+        key = self._next_prefill_key()
+        if has_prior:
+            next_toks, cacheL, lens_d = self._prefill_suffix_jit(
+                self.prefill_params, self._prior_blocks(),
+                jnp.asarray(prior_pt), jnp.asarray(toks), jnp.asarray(lens),
+                jnp.asarray(cached), key,
+            )
+            self._prefill_shapes.add(("suffix", L))
+            # the p-pins held the gathered prior across the dispatch; the
+            # page-table row (d-side) keeps the row's own hold from here
+            for job in jobs:
+                self._store_deref(job.p_ids)
+        else:
+            next_toks, cacheL, lens_d = self._prefill_paged_jit(
+                self.prefill_params, jnp.asarray(toks), jnp.asarray(lens),
+                key,
+            )
+            self._prefill_shapes.add(("paged", L))
+        store_ctx = self._store_prepare(jobs, cacheL, L)
+        art = PrefillArtifact(
+            cacheL, slot_idx, lens_d, next_toks, jnp.asarray(maxn),
+            [job.req for job in jobs], [job.slot for job in jobs],
+            n_rows=n, prefix_len=int((cached + lens).max()),
+            dest_blocks=dest, cached_lens=cached, bucket=L,
+        )
+        art, t_xfer = self._handoff(art)  # disagg: pod-boundary handoff
+        self.pool.splice(art)
+        toks_host = np.asarray(art.next_tokens)  # prefill timing fence
+        dt = max(time.perf_counter() - t0 - t_xfer, 0.0)
+        # index the prompts' pages BEFORE the records loop: a request the
+        # prefill token already finishes releases its slot there, and the
+        # index must take its block references first
+        self._index_insert(jobs, store_ctx)
+        now = time.perf_counter()
+        for j, job in enumerate(jobs):
+            rec = self._records[job.req.request_id]
+            rec.add("queue", max(t0 - rec.t_issue, 0.0))
+            rec.add("preprocess", dt / n)
+            job.req.generated.append(int(toks_host[j]))
+            job.req.t_first_token = now
+            self._place(job.req, job.slot)
+        self._t_mark = now
+
     def _place(self, req: Request, slot: int):
         """Occupy ``slot`` — or, if the prefill token already exhausted the
         budget (max_new_tokens <= 1), finish the request right away (the
@@ -741,7 +1247,10 @@ class ServingEngine:
         fast path honors the budget)."""
         if req.max_new_tokens <= 1:
             # never occupies the slot, so no in-flight snapshot can
-            # reference it — no _finished_ids entry needed
+            # reference it — no _finished_ids entry needed. Paged rows
+            # still release their page-table hold (the prefix index has
+            # already taken its own references by this point).
+            self.pool.release_slot(slot)
             self._prefill_finished.append(
                 self._finish(req, self._records[req.request_id])
             )
@@ -804,6 +1313,12 @@ class ServingEngine:
                 self._finished_ids.add(req.request_id)
                 if self.pool.slots[i] is req:
                     self.pool.slots[i] = None
+                    # paged: drop the row's block references (safe while
+                    # stale in-flight steps remain — their frozen-lane
+                    # writes are dispatched before any splice that could
+                    # reuse a freed block, and device order is dispatch
+                    # order)
+                    self.pool.release_slot(i)
         if done and self._finished_ids:
             # ids only matter while an in-flight snapshot still references
             # them — prune so the set stays O(max_batch * inflight)

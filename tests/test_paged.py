@@ -1,0 +1,474 @@
+"""Paged KV pool + shared-prefix reuse invariants.
+
+Covers the allocator's refcount protocol, the paged decode-attention
+kernel vs the ring kernel, ring-vs-paged token identity across
+architectures (fused engine; the disaggregated modes are asserted in
+benchmarks/prefix.py on every CI run), the radix index's
+longest-prefix-match law (hypothesis), wire-byte reconciliation at
+0%/partial/100% prefix-hit rates, prefill sampling (top_k=1 == argmax),
+the paged warmup grid (zero compiles in the serving window), and the
+router's prefix_cache policy.
+"""
+
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import nodrop
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.kernels import ops
+from repro.models import kvcache as kvc
+from repro.serving import ServingEngine
+from repro.serving.cluster import Router
+from repro.serving.prefix import RadixPrefixIndex
+from repro.serving.request import Request
+
+
+def _requests(cfg, prompts, max_new=4):
+    return [
+        Request(prompt_tokens=np.asarray(p, np.int32), max_new_tokens=max_new)
+        for p in prompts
+    ]
+
+
+def _shared_prefix_prompts(cfg, *, n_families=2, per_family=2,
+                           prefix_len=32, suffix_len=16, seed=0):
+    """Interleaved families so later admission waves hit earlier waves'
+    indexed prefixes."""
+    rng = np.random.default_rng(seed)
+    fams = [rng.integers(0, cfg.vocab_size, prefix_len, dtype=np.int32)
+            for _ in range(n_families)]
+    out = []
+    for _ in range(per_family):
+        for f in fams:
+            out.append(np.concatenate(
+                [f, rng.integers(0, cfg.vocab_size, suffix_len,
+                                 dtype=np.int32)]
+            ))
+    return out
+
+
+def _drain_tokens(eng, cfg, prompts, max_new=4):
+    reqs = _requests(cfg, prompts, max_new)
+    for r in reqs:
+        eng.submit(r, time.perf_counter())
+    out = eng.run_until_drained(max_steps=100_000)
+    assert len(out) == len(reqs)
+    by_id = {r.request_id: r for r in out}
+    return [tuple(by_id[r.request_id].tokens) for r in reqs]
+
+
+# --------------------------------------------------------------------------- #
+# Allocator: refcount round-trips
+# --------------------------------------------------------------------------- #
+def test_pool_refcount_roundtrip():
+    pool = kvc.PagedKVPool(8, 16)
+    assert pool.live_blocks == 0 and pool.free_count == 7
+
+    ids = pool.alloc(3)
+    assert ids is not None and 0 not in ids  # sentinel never handed out
+    assert pool.live_blocks == 3
+
+    pool.ref(ids)  # second reader (a prefix index, say)
+    assert pool.deref(ids) == []  # still referenced: nothing freed
+    assert pool.live_blocks == 3
+    freed = pool.deref(ids)  # last reader drops
+    assert sorted(freed) == sorted(ids)
+    assert pool.live_blocks == 0 and pool.free_count == 7
+
+    with pytest.raises(RuntimeError):
+        pool.deref([ids[0]])  # double free
+    with pytest.raises(RuntimeError):
+        pool.ref([ids[0]])  # ref of a free block
+
+    assert pool.alloc(8) is None  # only 7 non-sentinel blocks exist
+    again = pool.alloc(7)
+    assert sorted(again) == list(range(1, 8))  # deterministic ascending
+    # sentinel refs survive everything
+    pool.ref([0])
+    assert pool.deref([0]) == []
+    pool.reset()
+    assert pool.live_blocks == 0 and pool.free_count == 7
+
+
+# --------------------------------------------------------------------------- #
+# Kernel: page-table gather == ring attention
+# --------------------------------------------------------------------------- #
+def test_paged_decode_attention_matches_ring_kernel():
+    rng = np.random.default_rng(0)
+    B, W, Hkv, G, hd, page = 3, 64, 2, 2, 16, 16
+    n_pages = W // page
+    q = jnp.asarray(rng.normal(size=(B, 1, Hkv * G, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, W, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, W, Hkv, hd)), jnp.float32)
+    lens = jnp.asarray([9, 33, 64], jnp.int32)
+
+    # scatter the dense rows into a shuffled block pool (block 0 = zero
+    # sentinel), record where each logical page landed
+    perm = rng.permutation(B * n_pages) + 1
+    kb = np.zeros((B * n_pages + 1, page, Hkv, hd), np.float32)
+    vb = np.zeros_like(kb)
+    pt = np.zeros((B, n_pages), np.int32)
+    for b in range(B):
+        for j in range(n_pages):
+            dst = perm[b * n_pages + j]
+            kb[dst] = np.asarray(k[b, j * page:(j + 1) * page])
+            vb[dst] = np.asarray(v[b, j * page:(j + 1) * page])
+            pt[b, j] = dst
+
+    out_ring = ops.decode_attention(q, k, v, lens, block_k=page)
+    out_paged = ops.paged_decode_attention(
+        q, jnp.asarray(kb), jnp.asarray(vb), jnp.asarray(pt), lens
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_paged), np.asarray(out_ring), atol=1e-6, rtol=0
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Engine: ring vs paged token identity across architectures
+# --------------------------------------------------------------------------- #
+_PAGED_ARCHS = [
+    "llama3-8b",
+    "starcoder2-3b",
+    pytest.param("qwen3-32b", marks=pytest.mark.slow),
+    pytest.param("grok-1-314b", marks=pytest.mark.slow),
+    # MLA: paged pool without prefix reuse (latent prior can't be gathered)
+    pytest.param("deepseek-v2-236b", marks=pytest.mark.slow),
+]
+
+
+@pytest.mark.parametrize("name", _PAGED_ARCHS)
+def test_paged_vs_ring_token_identity(name, model_bank):
+    cfg = nodrop(ARCHITECTURES[name].reduced())
+    model, params = model_bank(cfg)
+    prompts = _shared_prefix_prompts(cfg)
+    kw = dict(max_batch=2, max_seq=128, temperature=0.0)
+
+    ring = _drain_tokens(ServingEngine(model, params, **kw), cfg, prompts)
+    eng = ServingEngine(model, params, paged=True, page_size=16, **kw)
+    assert eng.prefix_reuse == (model.cfg.mla is None)
+    paged = _drain_tokens(eng, cfg, prompts)
+    assert paged == ring
+    if eng.prefix_reuse:
+        # the interleaved families genuinely exercised reuse
+        assert eng.prefix_hits > 0
+        assert eng.prefill_tokens_uncached < eng.prefill_tokens_total
+
+
+def test_paged_reuse_counters_and_no_block_leak(model_bank):
+    cfg = get_config("llama3-8b").reduced()
+    model, params = model_bank(cfg)
+    eng = ServingEngine(model, params, max_batch=2, max_seq=128,
+                        paged=True, page_size=16, temperature=0.0)
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab_size, 48, dtype=np.int32)
+    mk = lambda: np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)]
+    )
+    _drain_tokens(eng, cfg, [mk()])  # prime: indexes the prefix pages
+    t0, u0 = eng.prefill_tokens_total, eng.prefill_tokens_uncached
+    assert t0 == u0 == 64  # nothing cached on the first admission
+    _drain_tokens(eng, cfg, [mk()])  # same system prompt, fresh suffix
+    assert eng.prefix_hits == 1
+    assert eng.prefix_hit_tokens == 48
+    assert eng.prefill_tokens_total - t0 == 64
+    assert eng.prefill_tokens_uncached - u0 == 16  # suffix only
+
+    # every live block is accounted for: slots are free post-drain, so
+    # clearing the index (deref both of each payload's references) must
+    # drain the allocator to zero — the refcount protocol leaks nothing
+    for (p, d) in eng.prefix_index.clear():
+        eng.pool.allocator.deref([p])
+        eng.pool.allocator.deref([d])
+    assert eng.pool.allocator.live_blocks == 0
+
+
+# --------------------------------------------------------------------------- #
+# Radix index: longest-prefix-match law (hypothesis when available, a
+# seeded random sweep of the same property otherwise)
+# --------------------------------------------------------------------------- #
+def _check_lpm_law(corpus, query, page=2):
+    """match(query) length == the longest page-aligned common prefix
+    between the query and ANY inserted prompt (tiny alphabet so overlaps
+    actually occur), and the returned payloads identify those pages."""
+    idx = RadixPrefixIndex(page)
+    for i, toks in enumerate(corpus):
+        n = len(toks) // page
+        idx.insert(toks, [(i, j) for j in range(n)])
+
+    got = idx.match(query)
+
+    def common_pages(a, b):
+        n = 0
+        while ((n + 1) * page <= min(len(a), len(b))
+               and a[n * page:(n + 1) * page] == b[n * page:(n + 1) * page]):
+            n += 1
+        return n
+
+    want = max((common_pages(toks, query) for toks in corpus), default=0)
+    assert len(got) == want, (corpus, query, got)
+    # each matched page's payload points at a prompt that shares the
+    # query's prefix through that page
+    for j, (i, jj) in enumerate(got):
+        assert jj == j
+        assert corpus[i][: (j + 1) * page] == query[: (j + 1) * page]
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    _tokens = st.lists(st.integers(0, 3), min_size=0, max_size=24)
+
+    @given(corpus=st.lists(_tokens, min_size=0, max_size=6), query=_tokens)
+    @settings(max_examples=200, deadline=None)
+    def test_radix_longest_prefix_match_law(corpus, query):
+        _check_lpm_law(corpus, query)
+
+except ImportError:
+
+    @pytest.mark.parametrize("seed", range(50))
+    def test_radix_longest_prefix_match_law(seed):
+        rng = np.random.default_rng(seed)
+        corpus = [
+            [int(t) for t in rng.integers(0, 4, rng.integers(0, 25))]
+            for _ in range(rng.integers(0, 7))
+        ]
+        query = [int(t) for t in rng.integers(0, 4, rng.integers(0, 25))]
+        _check_lpm_law(corpus, query)
+
+
+def test_radix_capacity_evicts_lru_leaves():
+    idx = RadixPrefixIndex(1, capacity_pages=3)
+    idx.insert([1, 2], ["a1", "a2"])
+    # shares page [1] (first writer wins there) -> only 1 new page
+    idx.insert([1, 3], ["b1", "b2"])
+    assert idx.n_pages == 3
+    idx.match([1, 2])  # touch the [1,2] chain; [1,3] is now LRU leaf
+    idx.insert([9], ["c1"])
+    assert idx.n_pages == 3  # evicted one leaf to fit
+    assert idx.match([1, 3], peek=True) == ["a1"]  # leaf gone, trunk kept
+    assert idx.match([1, 2], peek=True) == ["a1", "a2"]
+
+
+# --------------------------------------------------------------------------- #
+# Disaggregated tier: exact wire-byte reconciliation at 0/partial/100% hit
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("prefix_len,prompt_len", [
+    (0, 48),    # 0% hit: nothing primed
+    (32, 64),   # partial: half the prompt cached
+    (48, 49),   # 100%: every full page cached, one suffix token remains
+])
+def test_disagg_paged_wire_reconciliation(prefix_len, prompt_len,
+                                          model_bank):
+    from repro.core.transfer import TransferMode
+    from repro.serving import DisaggregatedEngine, make_pod_mesh
+
+    cfg = get_config("llama3-8b").reduced()
+    model, params = model_bank(cfg)
+    eng = DisaggregatedEngine(
+        model, params, transfer_mode=TransferMode.DIRECT_HBM,
+        mesh=make_pod_mesh(), charge="modeled", max_batch=2, max_seq=128,
+        paged=True, page_size=16, temperature=0.0,
+    )
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, cfg.vocab_size, prefix_len, dtype=np.int32)
+    mk = lambda: np.concatenate([
+        prefix,
+        rng.integers(0, cfg.vocab_size, prompt_len - prefix_len,
+                     dtype=np.int32),
+    ])
+    if prefix_len:
+        _drain_tokens(eng, cfg, [np.concatenate(
+            [prefix, rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)]
+        )], max_new=2)
+    u0, wire0 = eng.prefill_tokens_uncached, eng.handoff_wire_bytes
+    _drain_tokens(eng, cfg, [mk(), mk()], max_new=2)
+    # what the collective moved == the geometry oracle for the
+    # refcount-adjusted suffix payloads, byte for byte
+    assert eng.handoff_wire_bytes == eng.handoff_payload_bytes
+    assert eng.handoff_wire_bytes > wire0
+    # prefill paid only the uncached suffixes
+    assert (eng.prefill_tokens_uncached - u0
+            == 2 * (prompt_len - prefix_len))
+
+
+# --------------------------------------------------------------------------- #
+# Prefill sampling: top_k=1 must equal the greedy argmax path exactly
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("paged", [False, True])
+def test_prefill_sampling_topk1_equals_argmax(paged, model_bank):
+    cfg = get_config("llama3-8b").reduced()
+    model, params = model_bank(cfg)
+    kw = dict(max_batch=2, max_seq=128)
+    if paged:
+        kw.update(paged=True, page_size=16)
+    prompts = _shared_prefix_prompts(cfg)
+
+    greedy = _drain_tokens(
+        ServingEngine(model, params, temperature=0.0, **kw), cfg, prompts
+    )
+    top1 = _drain_tokens(
+        ServingEngine(model, params, temperature=0.7, top_k=1,
+                      sample_seed=123, **kw),
+        cfg, prompts,
+    )
+    # a top-1 categorical IS the argmax, whatever the key or temperature
+    assert top1 == greedy
+
+    sampled = _drain_tokens(
+        ServingEngine(model, params, temperature=1.5, top_k=0,
+                      sample_seed=7, **kw),
+        cfg, prompts,
+    )
+    assert all(len(t) == len(g) for t, g in zip(sampled, greedy))
+
+
+# --------------------------------------------------------------------------- #
+# Warmup: the paged jit grid is pre-traced
+# --------------------------------------------------------------------------- #
+class _LogGrab(logging.Handler):
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.messages = []
+
+    def emit(self, record):
+        self.messages.append(record.getMessage())
+
+
+def _compiles_during(fn):
+    grab = _LogGrab()
+    logger = logging.getLogger("jax")
+    old_level = logger.level
+    logger.addHandler(grab)
+    logger.setLevel(logging.DEBUG)
+    try:
+        with jax.log_compiles():
+            fn()
+    finally:
+        logger.removeHandler(grab)
+        logger.setLevel(old_level)
+    return [m for m in grab.messages if m.startswith("Compiling ")]
+
+
+def test_paged_warmup_zero_compiles(model_bank):
+    cfg = get_config("llama3-8b").reduced()
+    model, params = model_bank(cfg, dtype=jnp.float32, seed=1)
+    kw = dict(max_batch=2, max_seq=64, paged=True, page_size=16,
+              temperature=0.0)
+    prompts = _shared_prefix_prompts(cfg, prefix_len=16, suffix_len=9)
+
+    # positive control: a cold paged engine's drain compiles
+    cold = ServingEngine(model, params, **kw)
+    assert _compiles_during(
+        lambda: _drain_tokens(cold, cfg, prompts, max_new=2)
+    ), "log capture saw no compiles from a cold paged engine"
+
+    warm = ServingEngine(model, params, warmup=True, **kw)
+    assert warm.warm_s > 0
+    compiles = _compiles_during(
+        lambda: _drain_tokens(warm, cfg, prompts, max_new=2)
+    )
+    assert compiles == [], f"compiled inside timed window: {compiles}"
+    assert warm.prefix_hits > 0  # the suffix-prefill path ran, pre-traced
+
+
+# --------------------------------------------------------------------------- #
+# Engine gates
+# --------------------------------------------------------------------------- #
+def test_paged_engine_gates(model_bank):
+    cfg = get_config("llama3-8b").reduced()
+    model, params = model_bank(cfg)
+    with pytest.raises(ValueError, match="multiple of"):
+        ServingEngine(model, params, max_batch=2, max_seq=128, paged=True,
+                      page_size=24)  # min_bucket 16 not page-aligned
+    eng = ServingEngine(model, params, max_batch=2, max_seq=64, paged=True,
+                        page_size=16)
+    with pytest.raises(ValueError, match="feature"):
+        eng.submit(Request(
+            prompt_tokens=np.arange(4, dtype=np.int32), max_new_tokens=2,
+            features=np.zeros((1, 3, 8), np.float32),
+        ))
+    with pytest.raises(ValueError, match="ring-wraps"):
+        eng.submit(Request(
+            prompt_tokens=np.arange(60, dtype=np.int32), max_new_tokens=8,
+        ))
+
+
+# --------------------------------------------------------------------------- #
+# Router: prefix_cache policy
+# --------------------------------------------------------------------------- #
+class _StubEngine:
+    def __init__(self, score):
+        self.score = score
+        self.page = 16
+
+    def prefix_lookup_tokens(self, tokens):
+        return self.score
+
+
+class _StubReplica:
+    def __init__(self, score, outstanding=0, jobs=0):
+        self.engine = _StubEngine(score)
+        self.outstanding_tokens = outstanding
+        self.jobs = jobs
+
+
+def _req(first_page=0):
+    return Request(
+        prompt_tokens=np.full(40, first_page, np.int32), max_new_tokens=4
+    )
+
+
+def test_router_prefix_cache_routes_to_deepest_match():
+    router = Router("prefix_cache")
+    assert "prefix_cache" in Router.POLICIES
+    reps = [_StubReplica(0), _StubReplica(48), _StubReplica(16)]
+    assert router.pick(_req(), reps) == 1  # deepest cached prefix wins
+    # ties break toward the less-loaded replica
+    reps = [_StubReplica(32, outstanding=10), _StubReplica(32, outstanding=2)]
+    assert router.pick(_req(), reps) == 1
+
+
+def test_router_prefix_cache_cold_fallback_is_sticky():
+    router = Router("prefix_cache")
+    reps = [_StubReplica(0, outstanding=5), _StubReplica(0, outstanding=1)]
+    first = router.pick(_req(first_page=7), reps)
+    assert first == 1  # least outstanding takes the cold prefix
+    # load flips, but the same system prompt stays home...
+    reps[0].outstanding_tokens, reps[1].outstanding_tokens = 1, 50
+    assert router.pick(_req(first_page=7), reps) == first
+    # ...while a different cold prefix goes to the now-lighter replica
+    assert router.pick(_req(first_page=8), reps) == 0
+
+
+def test_router_prefix_cache_on_real_cluster(model_bank):
+    from repro.serving.cluster import ServingCluster
+    from repro.serving.loadgen import shared_prefix_schedule
+
+    cfg = get_config("llama3-8b").reduced()
+    model, params = model_bank(cfg)
+    cluster = ServingCluster.build(
+        model, params, n_replicas=2, engine="fused", policy="prefix_cache",
+        max_batch=2, max_seq=128, paged=True, page_size=16, temperature=0.0,
+    )
+    sched = shared_prefix_schedule(
+        cfg.vocab_size, rate_rps=100.0, n_requests=8, n_prefixes=2,
+        prefix_len=32, suffix_len=16, max_new=2, seed=5,
+    )
+    for a in sched:
+        cluster.submit(a.request)
+    assert len(cluster.run_until_drained()) == len(sched)
+    # each system-prompt family lands wholly on one replica
+    fams = {}
+    for a in sched:
+        key = tuple(int(t) for t in a.request.prompt_tokens[:16])
+        fams.setdefault(key, set()).add(
+            cluster.replica_of(a.request.request_id)
+        )
+    assert all(len(v) == 1 for v in fams.values()), fams

@@ -195,6 +195,7 @@ for i, mode in enumerate((TransferMode.DIRECT_HBM, TransferMode.DIRECT_DMA)):
         eng.prefill_params,
         jnp.zeros((KW["max_batch"], 16), jnp.int32),
         jnp.ones((KW["max_batch"],), jnp.int32),
+        eng.prefill_key,
     )
     assert set(nt.devices()) == pdev
     assert devset(c1) == pdev

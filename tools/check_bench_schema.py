@@ -1,0 +1,156 @@
+#!/usr/bin/env python
+"""Benchmark-JSON schema check: every committed ``BENCH_*.json`` must
+carry the fields docs/benchmarks.md documents, and every required leaf
+field must actually be MENTIONED in docs/benchmarks.md — so the JSON the
+repo ships, the docs that explain it, and the benchmark code that writes
+it cannot drift apart silently.
+
+Schemas are dotted key paths; a ``*`` segment means "every child" (e.g.
+``disagg.disaggregated.*.handoff_wire_bytes`` requires the field in every
+transfer mode's row). A path's last segment is the leaf checked against
+the docs text. Run from anywhere: paths resolve against the repo root.
+
+Usage: python tools/check_bench_schema.py  (exit 1 + a listing on drift)
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = ROOT / "docs" / "benchmarks.md"
+
+# file -> required dotted paths ('*' = every child of a dict)
+SCHEMAS = {
+    "BENCH_serving.json": [
+        "benchmark",
+        "serving.workload.model",
+        "serving.seed_sync_loop.wall_s",
+        "serving.fast_path.wall_s",
+        "serving.fast_path.decode_steps",
+        "serving.fast_path.decode_steps_dispatched",
+        "serving.fast_path.tokens_per_s",
+        "serving.fast_path.prefill_compiles",
+        "serving.speedup.tokens_per_s",
+        "ragged_decode_kernel.ragged_lens_us",
+        "ragged_decode_kernel.dense_lens_us",
+    ],
+    "BENCH_disagg.json": [
+        "benchmark",
+        "disagg.workload.placement",
+        "disagg.single_engine.ttft_s_mean",
+        "disagg.disaggregated.*.handoffs",
+        "disagg.disaggregated.*.handoff_wire_bytes",
+        "disagg.disaggregated.*.request_prefix_bytes_mean",
+        "disagg.disaggregated.*.handoff_charge_s_mean",
+        "disagg.disaggregated.*.ttft_s_mean",
+        "disagg.disaggregated.*.token_match_vs_single_engine",
+        "disagg.ordering_ok.handoff_charge",
+        "disagg.occupancy_sweep.*.padded_tree_wire_bytes",
+        "disagg.occupancy_sweep.*.occ1_short_vs_padded_tree",
+        "disagg.warmup_sweep.warm_construction_s",
+        "disagg.warmup_sweep.extents_pretraced",
+        "disagg.warmup_sweep.prefill_buckets_pretraced",
+    ],
+    "BENCH_cluster.json": [
+        "benchmark",
+        "cluster.workload.warmup_dropped_from_percentiles",
+        "cluster.skewed_trace.trace",
+        "cluster.skewed_trace.fused.gap_s",
+        "cluster.skewed_trace.fused.round_robin.slo",
+        "cluster.skewed_trace.fused.round_robin.per_replica",
+        "cluster.skewed_trace.fused.round_robin.balance_index_busy",
+        "cluster.skewed_trace.fused.round_robin.balance_index_routed",
+        "cluster.rate_sweep",
+        "cluster.token_identity.direct_hbm",
+        "cluster.token_identity.direct_dma",
+    ],
+    "BENCH_prefix.json": [
+        "benchmark",
+        "prefix.workload.prompt_len",
+        "prefix.workload.page_size",
+        "prefix.workload.n_prefixes",
+        "prefix.workload.zipf_a",
+        "prefix.workload.transfer_mode",
+        "prefix.hit_rate_sweep.*.hit_rate",
+        "prefix.hit_rate_sweep.*.prefix_len",
+        "prefix.hit_rate_sweep.*.suffix_len",
+        "prefix.hit_rate_sweep.*.prefill_tokens_total",
+        "prefix.hit_rate_sweep.*.prefill_tokens_uncached",
+        "prefix.hit_rate_sweep.*.uncached_fraction",
+        "prefix.hit_rate_sweep.*.prefix_hits",
+        "prefix.hit_rate_sweep.*.handoff_wire_bytes",
+        "prefix.hit_rate_sweep.*.wire_reconciled_exact",
+        "prefix.hit_rate_sweep.*.ttft_p99_s",
+        "prefix.hit_rate_sweep.*.ttft_mean_s",
+        "prefix.token_identity.*.token_match_vs_ring",
+        "prefix.token_identity.*.prefix_hits",
+    ],
+}
+
+
+def _resolve(node, parts, path_so_far=""):
+    """Yield (full_path, found) for one dotted path against ``node``."""
+    if not parts:
+        yield path_so_far, True
+        return
+    head, rest = parts[0], parts[1:]
+    if not isinstance(node, dict):
+        yield f"{path_so_far}.{head}".lstrip("."), False
+        return
+    if head == "*":
+        if not node:
+            yield f"{path_so_far}.*".lstrip("."), False
+            return
+        for k, v in node.items():
+            yield from _resolve(v, rest, f"{path_so_far}.{k}".lstrip("."))
+        return
+    if head not in node:
+        yield f"{path_so_far}.{head}".lstrip("."), False
+        return
+    yield from _resolve(node[head], rest, f"{path_so_far}.{head}".lstrip("."))
+
+
+def check() -> list:
+    """Return problem strings (missing fields / undocumented leaves /
+    missing files)."""
+    problems = []
+    docs_text = DOCS.read_text()
+    for fname, paths in SCHEMAS.items():
+        f = ROOT / fname
+        if not f.exists():
+            problems.append(f"{fname}: missing (run its benchmark)")
+            continue
+        data = json.loads(f.read_text())
+        for path in paths:
+            parts = path.split(".")
+            for full, found in _resolve(data, parts):
+                if not found:
+                    problems.append(f"{fname}: missing field {full}")
+            leaf = parts[-1]
+            # case-insensitive: docs write enum leaves as DIRECT_DMA etc.
+            if leaf != "*" and leaf.lower() not in docs_text.lower():
+                problems.append(
+                    f"docs/benchmarks.md: field `{leaf}` ({fname}) "
+                    f"undocumented"
+                )
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    if problems:
+        print("benchmark schema drift:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    n = sum(len(v) for v in SCHEMAS.values())
+    print(f"bench schemas ok: {n} required paths across "
+          f"{len(SCHEMAS)} BENCH files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
