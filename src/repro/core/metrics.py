@@ -64,6 +64,47 @@ def jain_index(xs) -> float:
     return tot * tot / (len(xs) * sq)
 
 
+def merge_record_streams(streams, offsets=None) -> list:
+    """Merge per-process :class:`~repro.core.profiler.RequestRecord`
+    streams into one timeline, tolerating clock skew.
+
+    Each replica process stamps ``t_issue``/``t_done`` with its OWN
+    ``time.perf_counter`` — an epoch that differs arbitrarily between
+    processes (perf_counter has no defined zero). ``offsets[i]`` is
+    stream i's estimated ``child_clock - reference_clock`` skew (the
+    socket-handshake estimate ``ipc.ReplicaClient.clock_offset``);
+    subtracting it rebases every absolute stamp onto the reference
+    (parent) clock. Durations — ``stage_s``, ``cpu_s``,
+    ``t_done - t_issue`` — are differences of same-clock stamps, so they
+    are skew-invariant and pass through untouched; only the absolute
+    placement on the merged timeline needs the offset.
+
+    Returns ONE list sorted by rebased ``t_done`` (completion order, the
+    order single-process stores accumulate in), with rebased copies —
+    source records are never mutated. ``offsets=None`` means all streams
+    already share the reference clock.
+    """
+    import dataclasses
+
+    streams = [list(s) for s in streams]
+    if offsets is None:
+        offsets = [0.0] * len(streams)
+    if len(offsets) != len(streams):
+        raise ValueError(
+            f"offsets length {len(offsets)} != streams length {len(streams)}"
+        )
+    merged = []
+    for recs, off in zip(streams, offsets):
+        for rec in recs:
+            merged.append(
+                rec if off == 0.0 else dataclasses.replace(
+                    rec, t_issue=rec.t_issue - off, t_done=rec.t_done - off
+                )
+            )
+    merged.sort(key=lambda r: r.t_done)
+    return merged
+
+
 def slo_summary(responses, *, warmup: int = 0) -> dict:
     """Warmup-aware serving SLO percentiles over Response objects.
 

@@ -77,11 +77,12 @@ by ``benchmarks/cluster.py``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
-from repro.core.metrics import jain_index, slo_summary
-from repro.core.profiler import ProfileStore
-from repro.serving.engine import ServingEngine
+from repro.core.metrics import jain_index, merge_record_streams, slo_summary
+from repro.core.profiler import ProfileStore, RequestRecord
+from repro.serving.engine import ServingEngine, _next_pow2
 
 
 def replica_pod_slices(n_pods: int, n_replicas: int,
@@ -148,6 +149,244 @@ class Replica:
         """Mean occupied-slot fraction over the cluster steps so far."""
         denom = self.steps * self.engine.max_batch
         return self.busy_slot_steps / denom if denom else 0.0
+
+    # ------------------------------------------------------------------ #
+    # backend seam: ServingCluster drives replicas only through these, so
+    # in-process and process-backed replicas are interchangeable
+    # ------------------------------------------------------------------ #
+    @property
+    def idle(self) -> bool:
+        return self.engine.idle
+
+    @property
+    def queued_requests(self) -> list:
+        return list(self.engine.queue)
+
+    @property
+    def records(self):
+        """request_id -> RequestRecord (what Gateway mutates in place)."""
+        return self.engine._records
+
+    @property
+    def clock_offset(self) -> float:
+        """Per-process perf_counter skew vs the router's clock (0 for an
+        in-process replica: same interpreter, same clock)."""
+        return 0.0
+
+    def submit(self, req, now: Optional[float] = None) -> None:
+        self.engine.submit(req, now)
+
+    def step(self) -> list:
+        return self.engine.step()
+
+    def sample_occupancy(self) -> None:
+        """One occupancy sample per cluster step (the balance metric)."""
+        self.steps += 1
+        self.busy_slot_steps += self.occupancy
+
+    def store_records(self) -> list:
+        return list(self.engine.store.records)
+
+    def drain(self, deadline_s: float = 120.0) -> list:
+        """Step to idle (bounded); returns the finished responses."""
+        out = []
+        t_end = time.perf_counter() + deadline_s
+        while not self.idle:
+            out.extend(self.step())
+            self.sample_occupancy()
+            if time.perf_counter() > t_end:
+                raise RuntimeError(
+                    f"replica {self.index} drain exceeded {deadline_s}s"
+                )
+        out.extend(self.step())
+        return out
+
+    def close(self) -> None:
+        eng_close = getattr(self.engine, "close", None)
+        if callable(eng_close):
+            eng_close()
+
+
+class _RemoteEngineFacade:
+    """The slice of the single-engine surface the :class:`Router`'s
+    policies touch, backed by a :class:`ProcessReplica`'s cached load
+    snapshot instead of a live engine. Deliberately does NOT expose
+    ``prefix_lookup_tokens`` — a remote radix index can't be peeked
+    without an RPC per replica per request, so the ``prefix_cache``
+    policy's scores degrade to its sticky first-page fallback (same
+    contract as engines without prefix reuse)."""
+
+    def __init__(self, replica: "ProcessReplica", spec: dict):
+        self._replica = replica
+        kw = spec.get("engine_kw") or {}
+        self.bucketed_prefill = bool(kw.get("bucketed_prefill", True))
+        self.min_bucket = int(kw.get("min_bucket", 16))
+        self.max_seq = int(kw.get("max_seq", 256))
+        self.max_batch = int(kw.get("max_batch", 8))
+        self.page = int(kw.get("page_size", 16))
+
+    def _bucket(self, s: int) -> int:
+        return min(max(_next_pow2(s), self.min_bucket), self.max_seq)
+
+    @property
+    def queue(self) -> list:
+        """Depth-only placeholder: the queued Request objects live in the
+        worker process; router policies only ever len() this."""
+        return [None] * self._replica.queue_depth
+
+
+class ProcessReplica:
+    """One replica living in its own OS process, driven over the socket
+    RPC control plane (``serving/ipc.py`` / ``serving/worker.py``).
+
+    Duck-types :class:`Replica`'s backend seam (submit / step /
+    sample_occupancy / idle / records / store_records / drain / close plus
+    the router-visible load counters), so the Router and ServingCluster
+    drive both kinds identically. Differences that matter:
+
+    * **Load counters are snapshots.** Every submit/harvest RPC reply
+      carries the worker's fresh ``load_snapshot()``; between RPCs the
+      counters are as stale as the last exchange — exactly the staleness
+      a distributed router lives with.
+    * **Records merge at harvest.** The parent keeps a stub
+      ``RequestRecord`` per submit (the object ``Gateway`` mutates); when
+      the child's finished record arrives it is folded INTO the stub in
+      place — stage/cpu charges summed, ``t_done`` rebased from the
+      child's perf_counter epoch onto the parent's via the handshake
+      ``clock_offset`` — so record identity is stable across the
+      request's whole life (see ``core.metrics.merge_record_streams``
+      for the skew rationale).
+    * **Occupancy is sampled child-side.** The worker's pipeline counts
+      its own steps/busy-slot-steps; :meth:`sample_occupancy` is a no-op
+      and the balance telemetry reads the snapshot.
+    """
+
+    def __init__(self, index: int, client, spec: dict, pods: tuple = ()):
+        self.index = index
+        self.client = client  # ipc.ReplicaClient
+        self.pods = pods
+        self.routed = 0
+        self.engine = _RemoteEngineFacade(self, spec)
+        self._load = {
+            "queue_depth": 0, "occupancy": 0,
+            "free_slots": self.engine.max_batch, "outstanding_tokens": 0,
+            "steps": 0, "busy_slot_steps": 0, "submitted": 0, "emitted": 0,
+            "submitted_bytes": 0, "idle": True,
+        }
+        self._records_local: dict = {}  # request_id -> merged/stub record
+        self._store = ProfileStore()
+
+    # -------------------------- load counters ------------------------- #
+    @property
+    def queue_depth(self) -> int:
+        return self._load["queue_depth"]
+
+    @property
+    def occupancy(self) -> int:
+        return self._load["occupancy"]
+
+    @property
+    def free_slots(self) -> int:
+        return self._load["free_slots"]
+
+    @property
+    def jobs(self) -> int:
+        return self.queue_depth + self.occupancy
+
+    @property
+    def outstanding_tokens(self) -> int:
+        return self._load["outstanding_tokens"]
+
+    @property
+    def steps(self) -> int:
+        return self._load["steps"]
+
+    @property
+    def busy_slot_steps(self) -> int:
+        return self._load["busy_slot_steps"]
+
+    @property
+    def occupancy_mean(self) -> float:
+        denom = self.steps * self.engine.max_batch
+        return self.busy_slot_steps / denom if denom else 0.0
+
+    @property
+    def clock_offset(self) -> float:
+        return self.client.clock_offset
+
+    # --------------------------- backend seam ------------------------- #
+    @property
+    def idle(self) -> bool:
+        """Fresh check (one load RPC): drain loops poll this, and a stale
+        snapshot would end them early or never."""
+        self._load = self.client.load()
+        return bool(self._load["idle"])
+
+    @property
+    def queued_requests(self) -> list:
+        return self.engine.queue
+
+    @property
+    def records(self) -> dict:
+        return self._records_local
+
+    def submit(self, req, now: Optional[float] = None) -> None:
+        # the stub is what Gateway mutates between submit and harvest;
+        # engine-side ingress charges happen in the WORKER's engine and
+        # fold in at harvest, so nothing is double-charged here
+        self._records_local[req.request_id] = RequestRecord(
+            request_id=req.request_id, client_id=req.client_id,
+            priority=req.priority, t_issue=time.perf_counter(),
+            bytes_in=req.payload_bytes, bytes_out=4 * req.max_new_tokens,
+        )
+        self._load = self.client.submit(req)
+
+    def _merge(self, pairs) -> list:
+        """Fold harvested child records into their parent-side stubs (in
+        place — Gateway holds references) and return the responses."""
+        out = []
+        for rsp, child in pairs:
+            stub = self._records_local.get(child.request_id)
+            if stub is None:  # submitted out-of-band; adopt as-is, rebased
+                stub = dataclasses.replace(
+                    child,
+                    t_issue=child.t_issue - self.clock_offset,
+                    stage_s=dict(child.stage_s),
+                )
+                self._records_local[child.request_id] = stub
+                stub.t_done = child.t_done - self.clock_offset
+            else:
+                for k, v in child.stage_s.items():
+                    stub.add(k, v)
+                stub.cpu_s += child.cpu_s
+                stub.transfer_wall_s += child.transfer_wall_s
+                stub.t_done = child.t_done - self.clock_offset
+            self._store.add(stub)
+            out.append(rsp)
+        return out
+
+    def step(self) -> list:
+        pairs, self._load = self.client.harvest()
+        return self._merge(pairs)
+
+    def sample_occupancy(self) -> None:
+        pass  # the worker's pipeline samples its own occupancy
+
+    def store_records(self) -> list:
+        return list(self._store.records)
+
+    def drain(self, deadline_s: float = 120.0) -> list:
+        """One blocking drain RPC: the worker runs its pipeline to idle
+        and ships everything it finished along the way."""
+        pairs = self.client.drain(deadline_s)
+        self._load = self.client.load()
+        return self._merge(pairs)
+
+    def telemetry(self) -> dict:
+        return self.client.telemetry()
+
+    def close(self) -> None:
+        self.client.close()
 
 
 class Router:
@@ -291,12 +530,13 @@ class ServingCluster:
         if not replicas:
             raise ValueError("cluster needs at least one replica")
         self.replicas = [
-            r if isinstance(r, Replica) else Replica(i, r)
+            r if isinstance(r, (Replica, ProcessReplica)) else Replica(i, r)
             for i, r in enumerate(replicas)
         ]
         self.router = router if router is not None else Router(policy)
         self.responses: list = []  # completion-ordered, for telemetry
         self._where: dict = {}  # request_id -> replica index
+        self._closed = False
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -304,7 +544,10 @@ class ServingCluster:
               engine: str = "fused", mesh=None,
               pods_per_replica: Optional[int] = None,
               policy: str = "least_loaded", router: Optional[Router] = None,
-              warmup: bool = False, **engine_kw) -> "ServingCluster":
+              warmup: bool = False, backend: str = "inprocess",
+              devices_per_replica: Optional[int] = None, param_seed: int = 0,
+              backlog: int = 2, rpc_timeout_s: float = 120.0,
+              init_timeout_s: float = 600.0, **engine_kw) -> "ServingCluster":
         """Construct a cluster of ``n_replicas`` engines on a cluster mesh.
 
         engine: 'fused' (single-stage :class:`ServingEngine` per replica,
@@ -314,12 +557,25 @@ class ServingCluster:
         own pod WITHIN the replica's slice, the KV handoff crossing
         between them under ``engine_kw['transfer_mode']``).
 
-        mesh: a ('pod',)-axis mesh to carve up; default
-        ``launch.mesh.make_cluster_mesh(n_replicas, pods_per_replica)``.
-        Remaining ``engine_kw`` (max_batch, max_seq, transfer_mode,
-        temperature, ...) pass through to every replica's engine
-        constructor; ``warmup`` pre-traces each replica after its state is
-        committed to its slice.
+        backend: 'inprocess' (the A/B baseline and test default — every
+        replica is an object in this interpreter, stepped sequentially by
+        :meth:`step`) or 'process' (each replica is its OWN OS process
+        with its own XLA client over ``devices_per_replica`` forced host
+        devices, spoken to over the socket RPC control plane — real
+        concurrency, the deployment shape the paper measures). The
+        process backend rebuilds each worker's params deterministically
+        from ``model.init(jax.random.key(param_seed))``; pass params
+        built from the SAME seed for in-process-vs-process A/B identity.
+        Worker startup is overlapped across replicas; ``with`` the
+        cluster (or call :meth:`close`) so worker processes are reaped on
+        every exit path.
+
+        mesh: a ('pod',)-axis mesh to carve up (in-process backend only);
+        default ``launch.mesh.make_cluster_mesh(n_replicas,
+        pods_per_replica)``. Remaining ``engine_kw`` (max_batch, max_seq,
+        transfer_mode, temperature, ...) pass through to every replica's
+        engine constructor; ``warmup`` pre-traces each replica after its
+        state is committed to its slice.
         """
         from repro.launch.mesh import make_cluster_mesh
         from repro.sharding.partition import (
@@ -330,6 +586,19 @@ class ServingCluster:
 
         if engine not in ("fused", "disagg"):
             raise ValueError(f"engine must be 'fused' or 'disagg': {engine}")
+        if backend not in ("inprocess", "process"):
+            raise ValueError(
+                f"backend must be 'inprocess' or 'process': {backend}"
+            )
+        if backend == "process":
+            return cls._build_process(
+                model, n_replicas=n_replicas, engine=engine,
+                policy=policy, router=router, warmup=warmup,
+                devices_per_replica=devices_per_replica,
+                param_seed=param_seed, backlog=backlog,
+                rpc_timeout_s=rpc_timeout_s,
+                init_timeout_s=init_timeout_s, **engine_kw,
+            )
         ppr = (1 if engine == "fused" else 2) \
             if pods_per_replica is None else pods_per_replica
         if mesh is None:
@@ -358,6 +627,50 @@ class ServingCluster:
         out.mesh = mesh
         return out
 
+    @classmethod
+    def _build_process(cls, model, *, n_replicas: int, engine: str,
+                       policy: str, router: Optional[Router], warmup: bool,
+                       devices_per_replica: Optional[int], param_seed: int,
+                       backlog: int, rpc_timeout_s: float,
+                       init_timeout_s: float, **engine_kw) -> "ServingCluster":
+        """Process backend: spawn ``n_replicas`` worker processes (each
+        its own XLA client over its forced host-device subset), overlap
+        their init (jax import + deterministic param rebuild + optional
+        warmup), and wrap each in a :class:`ProcessReplica`."""
+        import numpy as np
+
+        from repro.serving.ipc import ReplicaClient
+
+        devices = (1 if engine == "fused" else 2) \
+            if devices_per_replica is None else int(devices_per_replica)
+        spec = {
+            "cfg": model.cfg,
+            "dtype": model.dtype if isinstance(model.dtype, str)
+            else np.dtype(model.dtype).name,
+            "param_seed": int(param_seed),
+            "engine": engine,
+            "engine_kw": dict(engine_kw, warmup=warmup),
+            "backlog": int(backlog),
+        }
+        clients, replicas = [], []
+        try:
+            for i in range(n_replicas):
+                clients.append(ReplicaClient(
+                    devices=devices, label=f"replica{i}",
+                    call_timeout_s=rpc_timeout_s,
+                    init_timeout_s=init_timeout_s,
+                ))
+            for c in clients:  # overlapped: all workers build concurrently
+                c.start_init(spec)
+            for i, c in enumerate(clients):
+                c.wait_init()
+                replicas.append(ProcessReplica(i, c, spec, pods=(i,)))
+        except Exception:
+            for c in clients:
+                c.close(timeout_s=2.0)
+            raise
+        return cls(replicas, policy=policy, router=router)
+
     # ------------------------------------------------------------------ #
     def submit(self, req, now: Optional[float] = None) -> int:
         """Route ``req`` to a replica and join its admission queue; the
@@ -365,25 +678,37 @@ class ServingCluster:
         Returns the replica index (recorded for telemetry)."""
         i = self.router.pick(req, self.replicas)
         rep = self.replicas[i]
-        rep.engine.submit(req, now)
+        rep.submit(req, now)
         rep.routed += 1
         self._where[req.request_id] = i
         return i
 
     def step(self) -> list:
-        """One cluster iteration: step every replica once, harvest
-        finished responses, sample occupancy for the balance index."""
+        """One cluster iteration: step every replica once (an in-process
+        replica runs admit/dispatch/harvest; a process replica harvests
+        whatever its worker finished since last time), collect finished
+        responses, sample occupancy for the balance index."""
         done = []
         for rep in self.replicas:
-            done.extend(rep.engine.step())
-            rep.steps += 1
-            rep.busy_slot_steps += rep.occupancy
+            done.extend(rep.step())
+            rep.sample_occupancy()
         self.responses.extend(done)
         return done
 
     @property
     def idle(self) -> bool:
-        return all(rep.engine.idle for rep in self.replicas)
+        return all(rep.idle for rep in self.replicas)
+
+    @property
+    def async_draining(self) -> bool:
+        """True when stepping is not what makes progress (process-backed
+        replicas drain in their own processes) — the open-loop driver's
+        cue that it may sleep instead of spin."""
+        return any(
+            isinstance(rep, ProcessReplica) or
+            getattr(rep.engine, "async_draining", False)
+            for rep in self.replicas
+        )
 
     def run_until_drained(self, max_steps: int = 10_000) -> list:
         out = []
@@ -398,24 +723,74 @@ class ServingCluster:
     # ------------------------------------------------------------------ #
     @property
     def queue(self) -> list:
-        """All queued (unadmitted) requests across replicas."""
-        return [r for rep in self.replicas for r in rep.engine.queue]
+        """All queued (unadmitted) requests across replicas (process
+        replicas contribute depth-only placeholders — their Request
+        objects live in the worker)."""
+        return [r for rep in self.replicas for r in rep.queued_requests]
 
     @property
     def _records(self) -> _MergedRecords:
-        return _MergedRecords([rep.engine._records for rep in self.replicas])
+        return _MergedRecords([rep.records for rep in self.replicas])
 
     @property
     def store(self) -> ProfileStore:
-        """Merged ProfileStore over every replica's records (rebuilt per
-        access; records are shared, not copied)."""
+        """Merged ProfileStore over every replica's records, on ONE
+        timeline: process replicas' records were rebased onto the
+        parent's clock at harvest, so the streams merge with zero
+        offsets and sort by completion (see ``core.metrics.
+        merge_record_streams`` for the skew rationale). Rebuilt per
+        access; records are shared, not copied."""
         s = ProfileStore()
-        for rep in self.replicas:
-            s.records.extend(rep.engine.store.records)
+        s.records.extend(merge_record_streams(
+            [rep.store_records() for rep in self.replicas]
+        ))
         return s
 
     def replica_of(self, request_id: int) -> Optional[int]:
         return self._where.get(request_id)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def parallelism(self) -> str:
+        """How replicas actually execute: ``"process-per-replica"`` (real
+        OS-process concurrency) or ``"sequential-in-process"`` (stepped
+        one after another in this interpreter — queueing effects are
+        real, parallel capacity is not). Recorded in telemetry and in
+        ``BENCH_cluster.json`` meta so the two regimes' numbers can't be
+        conflated."""
+        if any(isinstance(r, ProcessReplica) for r in self.replicas):
+            return "process-per-replica"
+        return "sequential-in-process"
+
+    def drain(self, deadline_s: float = 120.0) -> list:
+        """Drain every replica to idle. Process replicas drain INSIDE
+        their workers (one blocking RPC each — tight timing, no parent
+        poll loop); in-process replicas step here."""
+        done = []
+        for rep in self.replicas:
+            done.extend(rep.drain(deadline_s))
+        self.responses.extend(done)
+        return done
+
+    def close(self) -> None:
+        """Shut replicas down (terminate worker processes for the
+        process backend). Idempotent; safe on error paths — always
+        ``close()`` (or ``with``) a process-backed cluster, or its
+        workers outlive the router until the atexit reaper."""
+        if self._closed:
+            return
+        self._closed = True
+        for rep in self.replicas:
+            try:
+                rep.close()
+            except Exception:
+                pass  # reap the rest regardless
+
+    def __enter__(self) -> "ServingCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------ #
     def telemetry(self, *, warmup: int = 0) -> dict:
@@ -424,9 +799,10 @@ class ServingCluster:
         counters, and Jain balance indices (busy-slot time and routed
         counts; 1.0 = perfectly balanced, 1/n = one replica took all)."""
         busy = [rep.busy_slot_steps for rep in self.replicas]
-        return {
+        out = {
             "policy": self.router.policy,
             "n_replicas": len(self.replicas),
+            "parallelism": self.parallelism,
             "slo": slo_summary(self.responses, warmup=warmup),
             "per_replica": [
                 {
@@ -442,3 +818,24 @@ class ServingCluster:
                 jain_index([rep.routed for rep in self.replicas]), 4
             ),
         }
+        if self.parallelism == "process-per-replica":
+            # control-plane conservation counters: what each worker
+            # acknowledged vs what the router sent it, plus raw RPC wire
+            # volume — the process-backend analogue of the engines'
+            # handoff byte reconciliation
+            out["ipc"] = [
+                {
+                    "replica": rep.index,
+                    "rpc_bytes_sent": rep.client.bytes_sent,
+                    "rpc_bytes_recv": rep.client.bytes_recv,
+                    "request_payload_bytes":
+                        rep.client.request_payload_bytes,
+                    "submitted": rep._load["submitted"],
+                    "emitted": rep._load["emitted"],
+                    "submitted_bytes": rep._load["submitted_bytes"],
+                    "clock_offset_s": round(rep.clock_offset, 6),
+                }
+                for rep in self.replicas
+                if isinstance(rep, ProcessReplica)
+            ]
+        return out

@@ -66,7 +66,10 @@ step runs the whole active batch through one jitted step.
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
+import threading
 import time
+import traceback
 from collections import deque
 from typing import Optional
 
@@ -611,6 +614,10 @@ class ServingEngine:
         self._records: dict[int, RequestRecord] = {}
 
         self._finished_ids: set[int] = set()
+        # entries popped from the window but not yet finalized — empty on
+        # the synchronous step() path; EnginePipeline parks its harvest/
+        # detokenize backlog here so _finished_ids pruning sees them
+        self._backlog_entries: deque = deque()
         self._prefill_finished: list[Response] = []
         self._t_mark = time.perf_counter()
         self.decode_steps = 0  # total whole-batch decode dispatches
@@ -1275,10 +1282,15 @@ class ServingEngine:
         ]
         return max(out, default=0)
 
-    def _dispatch(self):
+    def _dispatch(self, outstanding: int = 0):
+        """Top up the in-flight window. ``outstanding`` is the number of
+        steps already popped from the window but not yet finalized (the
+        threaded pipeline's harvest/detokenize backlogs); the inference
+        clock only restarts when the device is genuinely idle — window
+        empty AND nothing in the backlogs."""
         if self.pool.all_free:
             return
-        if not self.pool.window:
+        if not self.pool.window and outstanding == 0:
             # pipeline (re)start: don't charge idle time to "inference"
             self._t_mark = time.perf_counter()
         limit = self._window_limit()
@@ -1286,6 +1298,11 @@ class ServingEngine:
             self.decode_steps += 1
 
     def _harvest(self) -> list[Response]:
+        """Synchronous harvest: device transfer + finalize in one call (the
+        ``step()`` path). The threaded pipeline runs the same two stages on
+        separate threads — :class:`EnginePipeline` pops the entry, moves the
+        device transfer onto its harvest thread, and hands
+        :meth:`_finalize_harvest` to its detokenize thread."""
         e = self.pool.pop_oldest()
         if e is None:
             return []
@@ -1293,6 +1310,13 @@ class ServingEngine:
         now = time.perf_counter()
         dt = max(now - self._t_mark, 0.0)
         self._t_mark = now
+        return self._finalize_harvest(e, toks, dt)
+
+    def _finalize_harvest(self, e: _InFlight, toks, dt: float) -> list[Response]:
+        """Detokenize/record-finalize stage: pure host bookkeeping over one
+        harvested step's tokens — per-request records, EOS/budget checks,
+        slot release. No device work happens here, which is what lets the
+        threaded pipeline run it concurrently with the next dispatch."""
         live = [
             (i, r) for i, r in enumerate(e.slots)
             if r is not None and r.request_id not in self._finished_ids
@@ -1321,9 +1345,13 @@ class ServingEngine:
                     self.pool.release_slot(i)
         if done and self._finished_ids:
             # ids only matter while an in-flight snapshot still references
-            # them — prune so the set stays O(max_batch * inflight)
+            # them — prune so the set stays O(max_batch * inflight). The
+            # threaded pipeline holds popped-but-unfinalized entries in
+            # ``_backlog_entries``; their snapshots count as in-flight too,
+            # or a stale step could double-finish a pruned request.
             live_ids = {
-                r.request_id for ent in self.pool.window
+                r.request_id
+                for ent in (*self.pool.window, *self._backlog_entries)
                 for r in ent.slots if r is not None
             }
             self._finished_ids &= live_ids
@@ -1481,3 +1509,270 @@ class ServingEngine:
                 done.append(self._finish(req, rec))
                 self.pool.slots[i] = None
         return done
+
+
+class EnginePipeline:
+    """Threaded host pipeline over a (fast-path) :class:`ServingEngine`.
+
+    The single-threaded ``step()`` loop interleaves three host jobs —
+    admission+dispatch, the blocking device->host harvest transfer, and
+    per-token record bookkeeping — on one thread, so the device waits
+    whenever the host is busy detokenizing. This class decouples them onto
+    three daemon threads joined by BOUNDED backlog queues, the
+    JetStream-style shape (dispatch / device harvest / detokenize backlog):
+
+      dispatch thread   : admits queued requests (prefill + splice) and
+                          tops up the in-flight decode window, then moves
+                          the oldest dispatched step onto the harvest
+                          backlog. All jit dispatch happens here.
+      harvest thread    : ``jax.device_get`` of each step's tokens+done —
+                          the only stage that blocks on the device.
+      detokenize thread : :meth:`ServingEngine._finalize_harvest` — record
+                          bookkeeping, EOS/budget checks, slot release,
+                          response finalization.
+
+    Each queue edge has a single producer and a single consumer and every
+    queue is FIFO, so steps are finalized in dispatch order: records can
+    neither reorder nor drop (``submitted``/``emitted`` count the
+    conservation invariant, asserted in tests). When detokenize falls
+    behind, the harvest thread blocks on its bounded put and dispatch
+    blocks in turn — backpressure, never loss.
+
+    The facade stays step()-compatible with a single engine (``submit`` /
+    ``step`` / ``queue`` / ``store`` / ``_records`` / ``idle`` /
+    ``run_until_drained``), so the Gateway, the load generators, and the
+    cluster Router drive it unchanged; ``step()`` just drains finished
+    responses (``async_draining = True`` tells the open-loop driver that
+    stepping is not what makes progress, so it may sleep instead of spin).
+    Engine state is guarded by one lock; the device transfer and the queue
+    hand-offs run outside it. Thread failures are captured and re-raised
+    on the caller's next ``submit``/``step``/``idle`` touch, so a broken
+    pipeline surfaces instead of hanging.
+
+    This is the per-replica host pipeline of the process-per-replica
+    cluster tier: ``serving/worker.py`` runs one of these inside each
+    replica process behind the socket RPC control plane (serving/ipc.py).
+    """
+
+    def __init__(self, engine: ServingEngine, *, backlog: int = 2,
+                 poll_s: float = 0.0005):
+        if engine.legacy:
+            raise ValueError(
+                "EnginePipeline requires the fast path (the legacy loop "
+                "is synchronous by design)"
+            )
+        if backlog < 1:
+            raise ValueError(f"backlog must be >= 1: {backlog}")
+        self.engine = engine
+        self.poll_s = poll_s
+        self.async_draining = True  # step() drains results; threads drive
+        self._lock = threading.RLock()
+        self._harvest_q: queue_mod.Queue = queue_mod.Queue(maxsize=backlog)
+        self._detok_q: queue_mod.Queue = queue_mod.Queue(maxsize=backlog)
+        self._outputs: deque = deque()
+        self._outstanding = 0  # popped from the window, not yet finalized
+        self._stop = threading.Event()
+        self._exc: Optional[str] = None
+        # conservation + occupancy telemetry (the worker's load snapshot)
+        self.submitted = 0
+        self.emitted = 0
+        self.submitted_bytes = 0
+        self.steps = 0  # finalized decode steps (occupancy samples)
+        self.busy_slot_steps = 0
+        self._threads = [
+            threading.Thread(target=self._run_guarded, args=(fn,),
+                             name=f"engine-pipeline-{tag}", daemon=True)
+            for tag, fn in (("dispatch", self._dispatch_loop),
+                            ("harvest", self._harvest_loop),
+                            ("detokenize", self._detok_loop))
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------------ #
+    # thread bodies
+    # ------------------------------------------------------------------ #
+    def _run_guarded(self, fn):
+        try:
+            fn()
+        except BaseException:  # noqa: BLE001 — surface to the caller
+            self._exc = traceback.format_exc()
+            self._stop.set()
+
+    def _put(self, q, item) -> bool:
+        """Bounded put that stays responsive to shutdown."""
+        while not self._stop.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue_mod.Full:
+                continue
+        return False
+
+    def _get(self, q):
+        while not self._stop.is_set():
+            try:
+                return q.get(timeout=0.05)
+            except queue_mod.Empty:
+                continue
+        return None
+
+    def _dispatch_loop(self):
+        eng = self.engine
+        while not self._stop.is_set():
+            entry = None
+            with self._lock:
+                eng._admit()
+                if eng._prefill_finished:  # budget met at prefill time
+                    done = list(eng._prefill_finished)
+                    eng._prefill_finished = []
+                    self._outputs.extend(done)
+                    self.emitted += len(done)
+                eng._dispatch(outstanding=self._outstanding)
+                if eng.pool.window:
+                    entry = eng.pool.pop_oldest()
+                    eng._backlog_entries.append(entry)
+                    self._outstanding += 1
+            if entry is not None:
+                # NEVER under the lock: a full backlog must block dispatch
+                # without blocking the detokenize thread's finalize
+                self._put(self._harvest_q, entry)
+            else:
+                time.sleep(self.poll_s)
+
+    def _harvest_loop(self):
+        while not self._stop.is_set():
+            entry = self._get(self._harvest_q)
+            if entry is None:
+                continue
+            # the blocking device->host transfer, off every other thread's
+            # critical path (no lock: snapshot arrays are read-only here)
+            toks, _done = jax.device_get((entry.tokens, entry.done))
+            self._put(self._detok_q, (entry, toks, time.perf_counter()))
+
+    def _detok_loop(self):
+        eng = self.engine
+        while not self._stop.is_set():
+            item = self._get(self._detok_q)
+            if item is None:
+                continue
+            entry, toks, t_h = item
+            with self._lock:
+                # FIFO edges: the entry being finalized is always the
+                # oldest backlog entry; drop it BEFORE finalize so the
+                # _finished_ids prune is tight
+                if eng._backlog_entries and eng._backlog_entries[0] is entry:
+                    eng._backlog_entries.popleft()
+                dt = max(t_h - eng._t_mark, 0.0)
+                eng._t_mark = t_h
+                done = eng._finalize_harvest(entry, toks, dt)
+                self.steps += 1
+                self.busy_slot_steps += sum(
+                    1 for r in entry.slots if r is not None
+                )
+                self._outputs.extend(done)
+                self.emitted += len(done)
+                self._outstanding -= 1
+
+    # ------------------------------------------------------------------ #
+    # step()-compatible facade
+    # ------------------------------------------------------------------ #
+    def _check(self):
+        if self._exc is not None:
+            raise RuntimeError(
+                f"engine pipeline thread failed:\n{self._exc}"
+            )
+
+    def submit(self, req: Request, now: Optional[float] = None):
+        self._check()
+        with self._lock:
+            self.engine.submit(req, now)
+            self.submitted += 1
+            self.submitted_bytes += req.payload_bytes
+
+    def step(self) -> list[Response]:
+        """Drain finished responses (completion order). The pipeline
+        threads make the actual progress; this never blocks."""
+        self._check()
+        with self._lock:
+            out = list(self._outputs)
+            self._outputs.clear()
+        return out
+
+    @property
+    def idle(self) -> bool:
+        self._check()
+        with self._lock:
+            eng = self.engine
+            return (not eng.queue and eng.pool.all_free
+                    and not eng.pool.window and self._outstanding == 0
+                    and not self._outputs)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Response]:
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if self.idle:
+                break
+            time.sleep(self.poll_s)
+        return out
+
+    def load_snapshot(self) -> dict:
+        """Router-visible load + conservation counters, read atomically
+        (what the worker returns on every RPC round-trip)."""
+        with self._lock:
+            eng = self.engine
+            free = len(eng.pool.free_slots())
+            queued = sum(r.max_new_tokens for r in eng.queue)
+            live = sum(
+                r.max_new_tokens - len(r.generated)
+                for r in eng.pool.slots if r is not None
+            )
+            return {
+                "queue_depth": len(eng.queue),
+                "occupancy": eng.max_batch - free,
+                "free_slots": free,
+                "outstanding_tokens": queued + live,
+                "steps": self.steps,
+                "busy_slot_steps": self.busy_slot_steps,
+                "submitted": self.submitted,
+                "emitted": self.emitted,
+                "submitted_bytes": self.submitted_bytes,
+                "idle": (not eng.queue and eng.pool.all_free
+                         and not eng.pool.window
+                         and self._outstanding == 0 and not self._outputs),
+            }
+
+    # passthroughs (Gateway / loadgen / tests reach the engine surface)
+    @property
+    def queue(self):
+        return self.engine.queue
+
+    @property
+    def store(self):
+        return self.engine.store
+
+    @property
+    def _records(self):
+        return self.engine._records
+
+    @property
+    def max_batch(self):
+        return self.engine.max_batch
+
+    @property
+    def pool(self):
+        return self.engine.pool
+
+    def close(self, timeout: float = 5.0):
+        """Stop the pipeline threads (idempotent). In-flight entries are
+        abandoned — close after draining if the results matter."""
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=timeout)
+
+    def __enter__(self) -> "EnginePipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -55,9 +55,17 @@ class Gateway:
     def run_until_drained(self, max_steps: int = 10_000):
         out = []
         for _ in range(max_steps):
-            out.extend(self.step())
+            got = self.step()
+            out.extend(got)
             if self.engine.idle:
                 break
+            if not got and self.async_draining:
+                # downstream progress happens on its own threads or in
+                # replica processes; polling harder only burns the CPU
+                # the paper's TCP path is trying to account for
+                import time
+
+                time.sleep(0.001)
         return out
 
     @property
@@ -69,9 +77,28 @@ class Gateway:
         return self.engine.idle
 
     @property
+    def async_draining(self) -> bool:
+        """True when the wrapped engine drains on its own (threaded
+        pipeline / process replicas) — stepping just collects results."""
+        return bool(getattr(self.engine, "async_draining", False))
+
+    @property
     def _records(self):
         return self.engine._records
 
     @property
     def store(self):
         return self.engine.store
+
+    def close(self):
+        """Pass shutdown downstream (process-backed clusters reap their
+        workers); no-op over plain engines."""
+        down = getattr(self.engine, "close", None)
+        if callable(down):
+            down()
+
+    def __enter__(self) -> "Gateway":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -197,7 +197,21 @@ def run_open_loop(engine, schedule: list, *, max_steps: int = 1_000_000,
             # long gap still polls the clock)
             time.sleep(min(max(sched[i].t - now, 0.0), poll_s))
             continue
-        out.extend(engine.step())
+        got = engine.step()
+        out.extend(got)
+        if not got and getattr(engine, "async_draining", False):
+            # asynchronously-draining engines (threaded pipeline, process
+            # replicas) make progress on their own — spinning here would
+            # charge pure polling to the driver host's CPU (and pollute
+            # the modeled-host cpu_s comparisons). Sleep until the next
+            # arrival is due, capped at poll_s so completions are still
+            # collected promptly.
+            now = time.perf_counter() - t0
+            wait = poll_s if i >= len(sched) else min(
+                max(sched[i].t - now, 0.0), poll_s
+            )
+            if wait > 0.0:
+                time.sleep(wait)
         steps += 1
         if steps > max_steps:
             raise RuntimeError(

@@ -57,6 +57,10 @@ SCHEMAS = {
     "BENCH_cluster.json": [
         "benchmark",
         "cluster.workload.warmup_dropped_from_percentiles",
+        # regime tag: "sequential-in-process" for the policy/rate sweeps
+        # vs "process-per-replica" for the process_cluster section — the
+        # two must never be conflated when reading throughput numbers
+        "cluster.workload.parallelism",
         "cluster.skewed_trace.trace",
         "cluster.skewed_trace.fused.gap_s",
         "cluster.skewed_trace.fused.round_robin.slo",
@@ -66,6 +70,15 @@ SCHEMAS = {
         "cluster.rate_sweep",
         "cluster.token_identity.direct_hbm",
         "cluster.token_identity.direct_dma",
+        "cluster.process_cluster.parallelism",
+        "cluster.process_cluster.cpus",
+        "cluster.process_cluster.sequential_drain_sum_s",
+        "cluster.process_cluster.concurrent_drain_s",
+        "cluster.process_cluster.concurrent_vs_sequential_ratio",
+        "cluster.process_cluster.parallel_capacity_asserted",
+        "cluster.process_cluster.token_identical_vs_inprocess",
+        "cluster.process_cluster.request_bytes_conserved",
+        "cluster.process_cluster.records_conserved",
     ],
     "BENCH_prefix.json": [
         "benchmark",
