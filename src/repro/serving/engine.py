@@ -85,6 +85,20 @@ from repro.serving.prefix import RadixPrefixIndex
 from repro.serving.request import Request, Response
 
 
+# Every jax.jit created in serving/ must either appear here — meaning
+# warm() pre-traces it at construction, so it never compiles inside a
+# timed stage — or carry a `# reprolint: disable=RL005` with the reason
+# it cannot be pre-traced. tools/reprolint RL005 checks the union of
+# these tables across serving/ against every jit creation site.
+WARM_PRETRACE_TABLE = frozenset({
+    "_step_jit",            # DecodePool: warmed by warm()'s fill_one
+    "_splice_jit",          # DecodePool: warmed via _warm_admit's splice
+    "_prefill_bucket_jit",  # one compile per pow2 bucket in warm()
+    "_prefill_paged_jit",   # paged twin, same bucket grid
+    "_prefill_suffix_jit",  # warmed per bucket when prefix_reuse is on
+})
+
+
 def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
@@ -625,11 +639,11 @@ class ServingEngine:
 
         # jitted entry points; jax.jit retraces per input shape, so the
         # prefill compile count equals the number of distinct bucket shapes.
-        self._decode = jax.jit(
+        self._decode = jax.jit(  # reprolint: disable=RL005 legacy-loop only; legacy retraces per shape by design (warm() is a no-op under legacy=True)
             lambda p, c, t, l: model.decode_step(p, c, t, l)
         )
         self._prefill_bucket_jit = jax.jit(self._prefill_bucket_impl)
-        self._prefill_exact_jit = jax.jit(self._prefill_exact_impl)
+        self._prefill_exact_jit = jax.jit(self._prefill_exact_impl)  # reprolint: disable=RL005 exact-shape path (feature payloads/SSM) compiles per ragged request shape and cannot be pre-traced; see warm() docstring
         self._prefill_paged_jit = jax.jit(self._prefill_paged_impl)
         self._prefill_suffix_jit = jax.jit(self._prefill_suffix_impl)
         self._prefill_shapes: set = set()
@@ -984,7 +998,7 @@ class ServingEngine:
                               n_rows=n, prefix_len=int(lens.max()))
         art, t_xfer = self._handoff(art)  # disagg: pod-boundary KV handoff
         self.pool.splice(art)
-        toks_host = np.asarray(art.next_tokens)  # blocks: prefill timing fence
+        toks_host = np.asarray(art.next_tokens)  # reprolint: disable=RL001 deliberate fence: 'preprocess' must include prefill device completion
         dt = max(time.perf_counter() - t0 - t_xfer, 0.0)
         self._prefill_shapes.add(("bucket", L))
         now = time.perf_counter()
@@ -1028,7 +1042,7 @@ class ServingEngine:
         )
         art, t_xfer = self._handoff(art)
         self.pool.splice(art)
-        tok_host = int(np.asarray(art.next_tokens)[0])
+        tok_host = int(np.asarray(art.next_tokens)[0])  # reprolint: disable=RL001 deliberate fence: exact-path 'preprocess' includes device completion
         dt = max(time.perf_counter() - t0 - t_xfer, 0.0)
         self._prefill_shapes.add(
             ("exact", toks.shape[1],
@@ -1231,7 +1245,7 @@ class ServingEngine:
         )
         art, t_xfer = self._handoff(art)  # disagg: pod-boundary handoff
         self.pool.splice(art)
-        toks_host = np.asarray(art.next_tokens)  # prefill timing fence
+        toks_host = np.asarray(art.next_tokens)  # reprolint: disable=RL001 deliberate fence: paged 'preprocess' includes prefill device completion
         dt = max(time.perf_counter() - t0 - t_xfer, 0.0)
         # index the prompts' pages BEFORE the records loop: a request the
         # prefill token already finishes releases its slot there, and the
@@ -1421,7 +1435,7 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
     # Legacy synchronous loop (seed behavior): the A/B baseline.
     # ------------------------------------------------------------------ #
-    def _prefill_one(self, slot: int, req: Request):
+    def _prefill_one(self, slot: int, req: Request):  # reprolint: disable=RL001 legacy A/B baseline: the seed loop blocks per token by design
         S = len(req.prompt_tokens)
         toks = jnp.asarray(req.prompt_tokens, jnp.int32)[None, :]
         batch = {"tokens": toks}
@@ -1429,7 +1443,7 @@ class ServingEngine:
             batch["features"] = jnp.asarray(req.features)
         key = (S, req.features is not None)
         if key not in self._prefill_cache:
-            self._prefill_cache[key] = jax.jit(
+            self._prefill_cache[key] = jax.jit(  # reprolint: disable=RL005 legacy loop retraces per (S, features) key by design — the measured A/B baseline
                 lambda p, b: self.model.prefill(p, b)
             )
         t0 = time.perf_counter()
@@ -1473,7 +1487,7 @@ class ServingEngine:
             del self.queue[best]
             self._prefill_one(self._free_slots()[0], req)
 
-    def _step_legacy(self) -> list[Response]:
+    def _step_legacy(self) -> list[Response]:  # reprolint: disable=RL001 legacy A/B baseline: the seed loop blocks per token by design
         """Seed loop: host sync + host argmax + per-slot Python loop.
 
         Kept byte-faithful to the seed, including its max_new_tokens=1
@@ -1553,6 +1567,15 @@ class EnginePipeline:
     cluster tier: ``serving/worker.py`` runs one of these inside each
     replica process behind the socket RPC control plane (serving/ipc.py).
     """
+
+    # tools/reprolint RL003 contract: these attributes are only touched
+    # under `with self._lock`, and nothing blocks while the lock is held
+    # (a blocking put under the lock is the deadlock shape: a full queue
+    # parks every thread that needs the lock)
+    _REPROLINT_GUARDED = (
+        "_outputs", "_outstanding", "submitted", "emitted",
+        "submitted_bytes", "steps", "busy_slot_steps",
+    )
 
     def __init__(self, engine: ServingEngine, *, backlog: int = 2,
                  poll_s: float = 0.0005):

@@ -28,6 +28,39 @@ def test_doc_links_resolve():
     assert "links ok" in proc.stdout
 
 
+def test_anchor_validation_catches_drift(tmp_path):
+    """check_docs validates #fragment anchors against real headings —
+    both cross-file (file.md#frag) and in-page (#frag) — with GitHub
+    slug rules (case/punctuation folding, -N dup suffixes)."""
+    sys.path.insert(0, str(ROOT))
+    try:
+        from tools import check_docs
+    finally:
+        sys.path.pop(0)
+    target = tmp_path / "guide.md"
+    target.write_text(
+        "# The `warm()` Pre-Trace Table\n"
+        "## Setup\n"
+        "## Setup\n"            # duplicate heading -> setup, setup-1
+        "```\n# not a heading (code fence)\n```\n"
+    )
+    page = tmp_path / "page.md"
+    page.write_text(
+        "[ok](guide.md#the-warm-pre-trace-table)\n"
+        "[ok-dup](guide.md#setup-1)\n"
+        "[in-page](#local)\n"
+        "\n# Local\n"
+        "[drift](guide.md#renamed-section)\n"
+        "[fence](guide.md#not-a-heading-code-fence)\n"
+        "[bad-in-page](#nowhere)\n"
+    )
+    broken = check_docs.check([page])
+    assert len(broken) == 3, broken
+    assert any("#renamed-section" in b for b in broken)
+    assert any("#not-a-heading-code-fence" in b for b in broken)
+    assert any("#nowhere" in b for b in broken)
+
+
 def test_docs_doctests_pass():
     for md in sorted((ROOT / "docs").glob("*.md")):
         result = doctest.testfile(str(md), module_relative=False)

@@ -1,11 +1,16 @@
 #!/usr/bin/env python
 """Docs link checker: every relative markdown link in README.md and
-docs/*.md must resolve to a file (or directory) in the repo.
+docs/*.md must resolve to a file (or directory) in the repo, and every
+``#fragment`` — in-page (``#section``) or cross-file
+(``file.md#section``) — must match a heading in the target markdown
+file (GitHub slug rules: lowercase, punctuation stripped, spaces to
+hyphens, ``-N`` suffixes on duplicates).
 
-External links (http/https/mailto) and pure in-page anchors (#...) are
-skipped; a link's #fragment is stripped before resolution. Run from
+External links (http/https/mailto) are skipped; fragments pointing at
+non-markdown targets are ignored (no headings to check). Run from
 anywhere: paths resolve against the repo root (this file's parent's
-parent). Used by the CI docs job and by tests/test_docs.py.
+parent). Used by the CI docs job (via ``python -m tools.checks``) and by
+tests/test_docs.py.
 
 Usage: python tools/check_docs.py  (exit 1 + a listing on broken links)
 """
@@ -22,24 +27,79 @@ ROOT = Path(__file__).resolve().parents[1]
 # resolve too
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _SKIP = ("http://", "https://", "mailto:")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*)$")
+# markdown decoration GitHub drops before slugifying heading text
+_INLINE_LINK = re.compile(r"\[([^\]]*)\]\([^)]*\)")
 
 
 def doc_files() -> list[Path]:
     return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
 
 
+def _slugify(text: str) -> str:
+    """GitHub's anchor slug: strip inline markup, lowercase, drop
+    punctuation, spaces -> hyphens."""
+    text = _INLINE_LINK.sub(r"\1", text).replace("`", "")
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(md: Path) -> set:
+    """Every anchor the rendered page exposes, ``-N``-suffixed dups
+    included. Fenced code blocks are skipped (a ``# comment`` inside one
+    is not a heading)."""
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in md.read_text().splitlines():
+        if line.lstrip().startswith(("```", "~~~")):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        base = _slugify(m.group(2))
+        n = counts.get(base, 0)
+        counts[base] = n + 1
+        slugs.add(base if n == 0 else f"{base}-{n}")
+    return slugs
+
+
 def check(paths=None) -> list[str]:
-    """Return 'file: broken-target' strings for every unresolvable link."""
+    """Return 'file: broken-target' strings for every unresolvable link
+    or dangling #fragment anchor."""
     broken = []
+    slug_cache: dict[Path, set] = {}
+
+    def slugs_of(md: Path) -> set:
+        if md not in slug_cache:
+            slug_cache[md] = heading_slugs(md)
+        return slug_cache[md]
+
+    def label(md: Path) -> str:
+        try:
+            return md.relative_to(ROOT).as_posix()
+        except ValueError:  # out-of-tree file (tests)
+            return md.name
+
     for md in paths or doc_files():
         for target in _LINK.findall(md.read_text()):
-            if target.startswith(_SKIP) or target.startswith("#"):
+            if target.startswith(_SKIP):
                 continue
-            rel = target.split("#", 1)[0]
-            if not rel:
+            rel, frag = (target.split("#", 1) + [""])[:2]
+            dest = md if not rel else (md.parent / rel)
+            if rel and not dest.exists():
+                broken.append(f"{label(md)}: {target}")
                 continue
-            if not (md.parent / rel).exists():
-                broken.append(f"{md.relative_to(ROOT)}: {target}")
+            if frag and dest.suffix == ".md" and dest.is_file():
+                if frag.lower() not in slugs_of(dest):
+                    broken.append(
+                        f"{label(md)}: {target} "
+                        f"(no heading for anchor #{frag})"
+                    )
     return broken
 
 
@@ -52,7 +112,8 @@ def main() -> int:
             print(f"  {b}")
         return 1
     n = sum(len(_LINK.findall(p.read_text())) for p in files)
-    print(f"docs links ok: {n} links across {len(files)} files")
+    print(f"docs links ok: {n} links across {len(files)} files "
+          f"(targets + anchors)")
     return 0
 
 

@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Unified static-check entry point: ``python -m tools.checks`` runs the
+docs link/anchor check, the BENCH-JSON schema check, and reprolint in
+one pass with one output contract:
+
+* one line per finding, ``[checker] finding`` — greppable, CI-annotable
+* exit 0 when every checker passes, 1 on any finding, 2 on usage error
+
+``--only docs,bench,lint`` restricts the run; reprolint runs in strict
+mode (unbaselined findings AND stale baseline entries fail), matching
+the CI lint job. Individual checkers remain runnable on their own
+(``python tools/check_docs.py`` etc.); this module only orchestrates.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools import check_bench_schema, check_docs
+from tools.reprolint import lint_paths, load_baseline
+from tools.reprolint.core import DEFAULT_BASELINE, ROOT
+
+
+def run_docs() -> list:
+    return check_docs.check()
+
+
+def run_bench() -> list:
+    return check_bench_schema.check()
+
+
+def run_lint() -> list:
+    """reprolint over src/repro in strict mode, findings as strings."""
+    findings = lint_paths([ROOT / "src" / "repro"])
+    baseline = load_baseline(DEFAULT_BASELINE)
+    out = [f.format() for f in findings if f.fingerprint not in baseline]
+    seen = {f.fingerprint for f in findings}
+    out.extend(
+        f"baseline.json: stale entry {fp} (finding fixed — remove it or "
+        f"rerun --update-baseline)"
+        for fp in sorted(baseline - seen)
+    )
+    return out
+
+
+CHECKERS = {
+    "docs": run_docs,
+    "bench": run_bench,
+    "lint": run_lint,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.checks",
+        description="run all repo static checks (docs links/anchors, "
+                    "BENCH schemas, reprolint --strict)",
+    )
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(CHECKERS))
+    args = ap.parse_args(argv)
+
+    names = list(CHECKERS)
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in CHECKERS]
+        if unknown:
+            print(f"checks: unknown checker(s): {', '.join(unknown)} "
+                  f"(have: {', '.join(CHECKERS)})", file=sys.stderr)
+            return 2
+
+    total = 0
+    for name in names:
+        findings = CHECKERS[name]()
+        for f in findings:
+            print(f"[{name}] {f}")
+        total += len(findings)
+        print(f"[{name}] {'ok' if not findings else f'{len(findings)} finding(s)'}")
+    return 1 if total else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,23 @@
+"""reprolint — AST invariant linter for this repo's serving hot paths.
+
+Run as ``python -m tools.reprolint [--strict] [paths...]``; see
+``docs/lint.md`` for the rules and the invariants they protect.
+"""
+
+from . import rules  # noqa: F401  (importing registers RL001–RL006)
+from .core import (  # noqa: F401
+    DEFAULT_BASELINE,
+    Context,
+    Finding,
+    Module,
+    RULES,
+    lint_paths,
+    lint_source,
+    load_baseline,
+    save_baseline,
+)
+
+__all__ = [
+    "Context", "Finding", "Module", "RULES", "DEFAULT_BASELINE",
+    "lint_paths", "lint_source", "load_baseline", "save_baseline",
+]

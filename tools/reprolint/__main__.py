@@ -1,0 +1,84 @@
+"""CLI for reprolint.
+
+Exit codes (shared with ``tools.checks``):
+  0  clean (or every finding baselined)
+  1  findings (unbaselined; with --strict also stale baseline entries)
+  2  usage / internal error
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import RULES, lint_paths, load_baseline, save_baseline
+from .core import DEFAULT_BASELINE, ROOT
+
+DEFAULT_PATHS = [ROOT / "src" / "repro"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="AST invariant linter for the serving hot paths "
+                    "(rules RL001-RL006; see docs/lint.md)",
+    )
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files or directories (default: src/repro)")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on stale baseline entries "
+                         "(the baseline may only shrink)")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="baseline file (default: tools/reprolint/"
+                         "baseline.json)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write current findings as the new baseline "
+                         "and exit 0")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in RULES:
+            print(f"{r.code} {r.name}: {r.doc}")
+        return 0
+
+    paths = args.paths or DEFAULT_PATHS
+    for p in paths:
+        if not p.exists():
+            print(f"reprolint: no such path: {p}", file=sys.stderr)
+            return 2
+
+    findings = lint_paths(paths)
+
+    if args.update_baseline:
+        save_baseline(args.baseline, findings)
+        print(f"reprolint: baselined {len(findings)} finding(s) -> "
+              f"{args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    fresh = [f for f in findings if f.fingerprint not in baseline]
+    seen = {f.fingerprint for f in findings}
+    stale = sorted(baseline - seen)
+
+    for f in fresh:
+        print(f.format())
+    n_base = len(findings) - len(fresh)
+    status = (f"reprolint: {len(fresh)} finding(s)"
+              + (f", {n_base} baselined" if n_base else ""))
+    if args.strict and stale:
+        status += (f", {len(stale)} STALE baseline entr"
+                   f"{'y' if len(stale) == 1 else 'ies'} "
+                   f"(fixed findings — remove them or rerun "
+                   f"--update-baseline)")
+    print(status)
+
+    if fresh or (args.strict and stale):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

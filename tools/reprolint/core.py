@@ -1,0 +1,359 @@
+"""reprolint framework: scoped AST analysis with import-alias resolution,
+inline suppressions, and a committed baseline.
+
+The linter exists because the repo's headline BENCH numbers are only as
+honest as its stage accounting: a hidden ``device_get`` inside a timed
+stage, an XLA compile landing in a timed window, or a lock held across a
+blocking queue put silently corrupts every measurement. Runtime tests
+catch these after the fact; reprolint catches the *shape* of the bug at
+PR time, the way ``tools/check_bench_schema.py`` freezes the BENCH/docs
+contract.
+
+Building blocks (used by every rule in ``rules.py``):
+
+* :class:`Module` — one parsed file: AST with parent links, import-alias
+  map (``jnp`` -> ``jax.numpy``, ``from time import perf_counter`` ->
+  ``time.perf_counter``), dotted-name resolution for attribute chains,
+  an enclosing-function index, and per-line suppressions.
+* Suppressions — ``# reprolint: disable=RL001`` on a finding's line (or,
+  on a ``def`` line, for the whole function) silences those rules; the
+  text after the code list is the justification and is REQUIRED — a
+  suppression with no reason is itself reported (RL000).
+* Baseline — a committed JSON list of finding fingerprints
+  (line-number-free, so baselines survive unrelated edits). Findings in
+  the baseline are grandfathered; ``--strict`` additionally fails on
+  STALE baseline entries so the file can only shrink.
+* :class:`Context` — cross-file facts gathered in a first pass (today:
+  the union of ``WARM_PRETRACE_TABLE`` declarations, for RL005).
+
+Rules register themselves via :func:`rule`; the runner applies each rule
+to every module it declares interest in (``Rule.interested``).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import re
+from pathlib import Path
+from typing import Callable, Iterable, Optional
+
+ROOT = Path(__file__).resolve().parents[2]
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+_SUPPRESS = re.compile(
+    r"#\s*reprolint:\s*disable=((?:RL\d{3})(?:\s*,\s*RL\d{3})*)\s*(.*)"
+)
+
+
+# --------------------------------------------------------------------------- #
+# findings
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint finding. ``fingerprint`` is line-number-free so a
+    baseline entry survives edits elsewhere in the file."""
+
+    rule: str  # "RL001"
+    path: str  # repo-relative posix path
+    line: int  # 1-based
+    scope: str  # enclosing qualname ("Class.method") or "<module>"
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        raw = f"{self.rule}|{self.path}|{self.scope}|{self.message}"
+        return hashlib.sha256(raw.encode()).hexdigest()[:16]
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+# --------------------------------------------------------------------------- #
+# per-module model
+# --------------------------------------------------------------------------- #
+class Module:
+    """One parsed source file plus the resolution/suppression machinery
+    every rule shares."""
+
+    def __init__(self, path: Path, source: str, rel: Optional[str] = None):
+        self.path = path
+        if rel is not None:
+            self.rel = rel
+        else:
+            try:
+                self.rel = path.resolve().relative_to(ROOT).as_posix()
+            except ValueError:
+                self.rel = path.as_posix()
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source)
+        # parent links: rules walk up for enclosing Assign / FunctionDef
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                child._reprolint_parent = parent  # type: ignore[attr-defined]
+        self.aliases = self._collect_aliases()
+        self._functions = self._collect_functions()
+        self._suppress_lines, self.bad_suppressions = self._collect_suppress()
+
+    # -------------------------- imports / names ------------------------ #
+    def _collect_aliases(self) -> dict:
+        """Local name -> fully qualified dotted path, from every import
+        statement in the file (any nesting level)."""
+        out: dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    out[a.asname or a.name] = f"{node.module}.{a.name}"
+        return out
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted name of an expression, with import aliases expanded:
+        ``jnp.asarray`` -> ``jax.numpy.asarray``; ``self.x.f`` ->
+        ``self.x.f``. None for non-name expressions (calls, literals)."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(self.aliases.get(node.id, node.id))
+            return ".".join(reversed(parts))
+        return None
+
+    def call_name(self, call: ast.Call) -> Optional[str]:
+        return self.resolve(call.func)
+
+    # ------------------------- function index -------------------------- #
+    def _collect_functions(self) -> list:
+        """(start, end, def_line, qualname, node) for every function,
+        innermost-last, with Class.method qualnames."""
+        out: list[tuple] = []
+
+        def visit(node, prefix):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    q = f"{prefix}{child.name}"
+                    out.append((child.lineno, child.end_lineno or child.lineno,
+                                child.lineno, q, child))
+                    visit(child, f"{q}.")
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, f"{prefix}{child.name}.")
+                else:
+                    visit(child, prefix)
+
+        visit(self.tree, "")
+        return out
+
+    def enclosing_function(self, line: int) -> Optional[tuple]:
+        """(qualname, node, def_line) of the innermost function
+        containing ``line``, or None at module level."""
+        best = None
+        for start, end, def_line, q, node in self._functions:
+            if start <= line <= end:
+                if best is None or (start >= best[3]):
+                    best = (q, node, def_line, start)
+        return None if best is None else best[:3]
+
+    def functions(self) -> Iterable[tuple]:
+        """Yield (qualname, node) for every function in the file."""
+        for _s, _e, _d, q, node in self._functions:
+            yield q, node
+
+    def classes(self) -> Iterable[ast.ClassDef]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ClassDef):
+                yield node
+
+    # -------------------------- suppressions --------------------------- #
+    def _collect_suppress(self):
+        """line -> set of rule codes; plus Findings for suppressions with
+        no justification text (they'd otherwise silence rules for free)."""
+        per_line: dict[int, set] = {}
+        bad: list[Finding] = []
+        for i, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS.search(text)
+            if not m:
+                continue
+            codes = {c.strip() for c in m.group(1).split(",")}
+            per_line[i] = codes
+            justification = m.group(2).strip(" -—:\t")
+            if not justification:
+                enc = self.enclosing_function(i)
+                bad.append(Finding(
+                    "RL000", self.rel, i, enc[0] if enc else "<module>",
+                    f"suppression of {','.join(sorted(codes))} carries no "
+                    f"justification (add one after the code list)",
+                ))
+        return per_line, bad
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        """True if ``rule`` is disabled on ``line`` — by a comment on the
+        line itself or on the enclosing function's ``def`` line (which
+        scopes the suppression to the whole function)."""
+        if rule in self._suppress_lines.get(line, ()):
+            return True
+        enc = self.enclosing_function(line)
+        if enc is not None:
+            _q, node, def_line = enc
+            # the comment may sit on any line of the (possibly wrapped)
+            # def signature
+            sig_end = node.body[0].lineno - 1 if node.body else def_line
+            for ln in range(def_line, sig_end + 1):
+                if rule in self._suppress_lines.get(ln, ()):
+                    return True
+        return False
+
+
+# --------------------------------------------------------------------------- #
+# cross-file context
+# --------------------------------------------------------------------------- #
+class Context:
+    """Facts gathered from ALL modules before any rule runs."""
+
+    def __init__(self, modules: list):
+        self.modules = modules
+        # union of WARM_PRETRACE_TABLE declarations (RL005): names of jit
+        # targets the construction-time warm pass pre-traces
+        self.warm_table: set[str] = set()
+        for mod in modules:
+            for node in ast.walk(mod.tree):
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and node.targets[0].id == "WARM_PRETRACE_TABLE"):
+                    self.warm_table |= _string_elements(node.value)
+
+    def in_warm_table(self, candidates: set) -> bool:
+        return bool(candidates & self.warm_table)
+
+
+def _string_elements(node: ast.AST) -> set:
+    """String constants inside a (frozen)set/tuple/list literal, possibly
+    wrapped in a frozenset()/set() call."""
+    if isinstance(node, ast.Call) and node.args:
+        return _string_elements(node.args[0])
+    out = set()
+    if isinstance(node, (ast.Set, ast.Tuple, ast.List)):
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.add(el.value)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# rule registry
+# --------------------------------------------------------------------------- #
+RULES: list = []
+
+
+@dataclasses.dataclass
+class Rule:
+    code: str
+    name: str
+    doc: str
+    interested: Callable[[Module], bool]
+    run: Callable[[Module, Context], list]
+
+
+def rule(code: str, name: str, doc: str,
+         interested: Callable[[Module], bool] = lambda mod: True):
+    """Decorator: register ``fn(module, context) -> [Finding]``."""
+
+    def deco(fn):
+        RULES.append(Rule(code, name, doc, interested, fn))
+        return fn
+
+    return deco
+
+
+# --------------------------------------------------------------------------- #
+# runner
+# --------------------------------------------------------------------------- #
+def iter_py_files(paths: Iterable[Path]) -> list:
+    out = []
+    for p in paths:
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def parse_modules(paths: Iterable[Path]) -> tuple:
+    """Parse every file; unparseable files become findings (RL000), not
+    crashes — a linter that dies on a syntax error hides every other
+    finding in the run."""
+    modules, errors = [], []
+    for f in iter_py_files(paths):
+        try:
+            modules.append(Module(f, f.read_text()))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            try:
+                rel = f.resolve().relative_to(ROOT).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            errors.append(Finding(
+                "RL000", rel, getattr(e, "lineno", 1) or 1, "<module>",
+                f"file does not parse: {e.__class__.__name__}: {e}",
+            ))
+    return modules, errors
+
+
+def lint_paths(paths: Iterable[Path]) -> list:
+    """Run every registered rule over ``paths`` (files or directories).
+    Suppressed findings are dropped here; baselining happens in the CLI."""
+    modules, findings = parse_modules(paths)
+    ctx = Context(modules)
+    for mod in modules:
+        findings.extend(mod.bad_suppressions)
+        for r in RULES:
+            if not r.interested(mod):
+                continue
+            for f in r.run(mod, ctx):
+                if not mod.suppressed(f.rule, f.line):
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def lint_source(source: str, filename: str = "snippet.py") -> list:
+    """Lint one in-memory snippet (the test harness entry point). The
+    ``filename`` controls path-scoped rules: name it e.g.
+    ``src/repro/serving/engine.py`` to exercise the hot-path rules."""
+    mod = Module(Path(filename), source, rel=Path(filename).as_posix())
+    ctx = Context([mod])
+    findings = list(mod.bad_suppressions)
+    for r in RULES:
+        if not r.interested(mod):
+            continue
+        for f in r.run(mod, ctx):
+            if not mod.suppressed(f.rule, f.line):
+                findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+# baseline
+# --------------------------------------------------------------------------- #
+def load_baseline(path: Path) -> set:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("findings", []))
+
+
+def save_baseline(path: Path, findings: Iterable[Finding]) -> None:
+    path.write_text(json.dumps({
+        "comment": ("grandfathered reprolint findings (fingerprints); "
+                    "regenerate with --update-baseline, shrink whenever "
+                    "a finding is fixed"),
+        "findings": sorted({f.fingerprint for f in findings}),
+    }, indent=2) + "\n")
