@@ -7,10 +7,12 @@ paper's model-serving traces are in once the NIC stops being the
 bottleneck), and records steps/s, tokens/s, end-to-end wall, and prefill
 compile counts for both engines in ``BENCH_serving.json``.
 
-Also micro-benchmarks the length-aware decode-attention kernel on a ragged
-batch vs a dense full-window batch (interpret mode on CPU: the numbers are
-correctness-representative; the HBM-bandwidth win is a TPU property of the
-clamped BlockSpec index_map).
+Also A/Bs token-packed + chunked prefill (``packed_prefill`` section:
+padded-token footprint and the decode head-of-line TPOT bound — both
+asserted on every run), and micro-benchmarks the length-aware
+decode-attention kernel on a ragged batch vs a dense full-window batch
+(interpret mode on CPU: the numbers are correctness-representative; the
+HBM-bandwidth win is a TPU property of the clamped BlockSpec index_map).
 
 Usage: PYTHONPATH=src python -m benchmarks.serving [--quick] [--out PATH]
 """
@@ -124,6 +126,130 @@ def bench_serving(quick: bool):
     }
 
 
+def bench_packed_prefill(quick: bool):
+    """Token-packed + chunked prefill A/B.
+
+    Two claims, both asserted on every run (including ``--quick``):
+
+    - ``footprint``: on a ragged co-arrival batch, packing the prompts
+      into ONE pow2 sequence dispatches strictly fewer padded token rows
+      than per-request pow2 buckets, with identical generated tokens.
+    - ``head_of_line``: while a long prompt admits mid-decode, chunked
+      prefill bounds the worst per-step stall a decoding victim sees (the
+      TPOT head-of-line bound) below the monolithic admission's stall.
+      Both stalls are self-calibrating ratios over the SAME engine's own
+      steady decode step, so the bound holds on any machine.
+    """
+    import statistics
+
+    import jax
+    import numpy as np
+
+    from repro.models import Model
+    from repro.serving import ServingEngine
+    from repro.serving.request import Request
+
+    cfg = micro_config()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+
+    # --- padded-token footprint: ragged co-arrivals, packed vs bucketed --
+    lens = [5, 17, 33, 50] if quick else [5, 11, 17, 24, 33, 50, 70, 90]
+    max_new = 4 if quick else 8
+
+    def footprint(**kw):
+        # max_batch = len(lens): the whole ragged batch co-arrives in one
+        # admission, the regime where per-request buckets pay the most pad
+        eng = ServingEngine(model, params, max_batch=len(lens), max_seq=256,
+                            temperature=0.0, **kw)
+        reqs = make_requests(cfg, lens, max_new)
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r, time.perf_counter())
+        eng.run_until_drained(max_steps=100_000)
+        return {
+            "wall_s": round(time.perf_counter() - t0, 4),
+            "prefill_tokens_total": eng.prefill_tokens_total,
+            "prefill_padded_tokens": eng.prefill_padded_tokens,
+            # dispatched token rows per true prompt token (1.0 = no pad)
+            "pad_overhead": round(
+                eng.prefill_padded_tokens / eng.prefill_tokens_total, 2
+            ),
+        }, [tuple(r.generated) for r in reqs]
+
+    bucketed, toks_b = footprint()
+    packed, toks_p = footprint(packed=True)
+    assert toks_p == toks_b, "packed prefill changed generated tokens"
+    assert (
+        packed["prefill_padded_tokens"] < bucketed["prefill_padded_tokens"]
+    ), (packed, bucketed)
+
+    # --- decode head-of-line: victim TPOT while a long prompt admits ----
+    big_len, chunk = 448, 64
+    victim_new = 24 if quick else 48
+
+    def tpot_probe(prefill_chunk):
+        eng = ServingEngine(model, params, max_batch=2, max_seq=512,
+                            temperature=0.0, prefill_chunk=prefill_chunk)
+        eng.warm()  # steady state: no compile walls inside the probe
+        victim = Request(
+            prompt_tokens=np.arange(16, dtype=np.int32) % cfg.vocab_size,
+            max_new_tokens=victim_new,
+        )
+        eng.submit(victim, time.perf_counter())
+        while len(victim.generated) < 4:  # settle into steady decode
+            eng.step()
+        base = []
+        for _ in range(8):  # victim alone: the TPOT baseline
+            t0 = time.perf_counter()
+            eng.step()
+            base.append(time.perf_counter() - t0)
+        big = make_requests(cfg, [big_len], 2, seed=2)[0]
+        eng.submit(big, time.perf_counter())
+        gaps = []  # per-step walls across the admission window
+        while (eng._chunk_jobs or not big.generated) and len(gaps) < 10_000:
+            t0 = time.perf_counter()
+            eng.step()
+            gaps.append(time.perf_counter() - t0)
+        eng.run_until_drained(max_steps=100_000)
+        base_ms = statistics.median(base) * 1e3
+        worst_ms = max(gaps) * 1e3
+        return {
+            "decode_step_ms": round(base_ms, 3),
+            "worst_step_ms": round(worst_ms, 3),
+            "admission_steps": len(gaps),
+            # worst decode stall during the admission, in units of this
+            # same engine's own steady decode step
+            "head_of_line_ratio": round(worst_ms / base_ms, 2),
+        }
+
+    unchunked = tpot_probe(0)
+    chunked = tpot_probe(chunk)
+    # the TPOT bound: chunking must shrink the worst stall a decoding
+    # request sees while a long prompt admits
+    assert (
+        chunked["head_of_line_ratio"] < unchunked["head_of_line_ratio"]
+    ), (chunked, unchunked)
+
+    return {
+        "footprint": {
+            "workload": {"prompt_lens": lens, "max_new_tokens": max_new,
+                         "max_batch": len(lens), "max_seq": 256},
+            "bucketed": bucketed,
+            "packed": packed,
+            "token_identical": True,  # asserted above
+        },
+        "head_of_line": {
+            "workload": {"victim_prompt": 16, "victim_new": victim_new,
+                         "big_prompt": big_len, "prefill_chunk": chunk,
+                         "max_batch": 2, "max_seq": 512},
+            "unchunked": unchunked,
+            "chunked": chunked,
+            "tpot_bound_ok": True,  # asserted above
+        },
+    }
+
+
 def bench_ragged_kernel(quick: bool):
     """Ragged vs dense decode-attention (interpret mode on CPU)."""
     import jax
@@ -167,6 +293,7 @@ def main():
     result = {
         "benchmark": "serving fast path (bucketed prefill + async decode)",
         "serving": bench_serving(args.quick),
+        "packed_prefill": bench_packed_prefill(args.quick),
         "ragged_decode_kernel": bench_ragged_kernel(args.quick),
     }
     with open(args.out, "w") as f:

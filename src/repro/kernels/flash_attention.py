@@ -7,6 +7,12 @@ Q/K tiles are MXU-aligned (block sizes multiples of 128 where the inputs
 allow). Causal and sliding-window masking skip fully-masked KV blocks via
 pl.when, so the kernel does ~half the naive FLOPs on causal prefill.
 
+Segment masking (packed prefill): when per-token segment ids ride along,
+the in-block mask additionally requires q and kv ids to match, so tokens
+from different packed prompts never attend to each other. The causal
+block-skip still applies — packed segments are contiguous, so any block
+pair reachable within a segment is causally reachable on packed indices.
+
 Layout: [B, H, S, hd] (the ops.py wrapper transposes from the model's
 [B, S, H, hd]). GQA: KV-head index = q-head // G via the BlockSpec index map —
 no KV expansion is materialized (unlike the XLA fallback path).
@@ -24,9 +30,14 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(
-    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-    *, scale, causal, window, bq, bk, n_kv, sq_real, skv_real,
+    q_ref, k_ref, v_ref, *rest,
+    scale, causal, window, bq, bk, n_kv, sq_real, skv_real, segmented,
 ):
+    if segmented:
+        qseg_ref, kseg_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        qseg_ref = kseg_ref = None
+        o_ref, m_scr, l_scr, acc_scr = rest
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -63,6 +74,10 @@ def _flash_kernel(
             mask &= qpos >= kpos
         if window > 0:
             mask &= kpos > qpos - window
+        if segmented:
+            qs = qseg_ref[0]  # [bq]
+            ks = kseg_ref[0]  # [bk]
+            mask &= qs[:, None] == ks[None, :]
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]
@@ -88,10 +103,13 @@ def _flash_kernel(
 def flash_attention_bhsd(
     q, k, v, *, causal=True, window=0, scale=None,
     block_q=128, block_k=128, interpret=False, sq_real=None, skv_real=None,
+    q_segment_ids=None, k_segment_ids=None,
 ):
     """q: [B,H,Sq,hd]; k,v: [B,Hkv,Skv,hd] — padded to block multiples by ops.
 
     sq_real/skv_real: pre-padding lengths (mask out the pad region).
+    q_segment_ids/k_segment_ids: [B, Sq] / [B, Skv] int32 packed-prefill
+    segment ids (pad tokens -1); both or neither.
     """
     B, H, Sq, hd = q.shape
     Hkv, Skv = k.shape[1], k.shape[2]
@@ -101,6 +119,9 @@ def flash_attention_bhsd(
     bk = min(block_k, Skv)
     n_q = pl.cdiv(Sq, bq)
     n_kv = pl.cdiv(Skv, bk)
+    segmented = q_segment_ids is not None
+    if segmented != (k_segment_ids is not None):
+        raise ValueError("q_segment_ids and k_segment_ids: both or neither")
 
     kernel = functools.partial(
         _flash_kernel,
@@ -108,15 +129,25 @@ def flash_attention_bhsd(
         bq=bq, bk=bk, n_kv=n_kv,
         sq_real=sq_real if sq_real is not None else Sq,
         skv_real=skv_real if skv_real is not None else Skv,
+        segmented=segmented,
     )
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+    ]
+    args = [q, k, v]
+    if segmented:
+        in_specs += [
+            pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i)),
+            pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j)),
+        ]
+        args += [q_segment_ids.astype(jnp.int32),
+                 k_segment_ids.astype(jnp.int32)]
     return pl.pallas_call(
         kernel,
         grid=(B, H, n_q, n_kv),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
         scratch_shapes=[
@@ -125,7 +156,7 @@ def flash_attention_bhsd(
             _vmem((bq, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*args)
 
 
 def _vmem(shape, dtype):

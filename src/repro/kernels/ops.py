@@ -38,18 +38,29 @@ def _pad_to(x, axis, mult):
     jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
 )
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
-                    block_q=128, block_k=128, interpret=None):
-    """q: [B,Sq,H,hd]; k,v: [B,Skv,Hkv,hd] -> [B,Sq,H,hd]."""
+                    block_q=128, block_k=128, interpret=None,
+                    segment_ids=None):
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,Hkv,hd] -> [B,Sq,H,hd].
+
+    segment_ids: optional [B, Sq] int32 packed-prefill ids (requires
+    Sq == Skv; pad tokens -1) — forbids cross-segment attention.
+    """
     interpret = _interpret_default() if interpret is None else interpret
     B, Sq, H, hd = q.shape
     qt = _pad_to(jnp.moveaxis(q, 1, 2), 2, block_q)
     kt = _pad_to(jnp.moveaxis(k, 1, 2), 2, block_k)
     vt = _pad_to(jnp.moveaxis(v, 1, 2), 2, block_k)
+    q_seg = k_seg = None
+    if segment_ids is not None:
+        seg = segment_ids.astype(jnp.int32)
+        q_seg = _pad_to(seg, 1, block_q)
+        k_seg = _pad_to(seg, 1, block_k)
     # real (unpadded) lengths are baked into the kernel's masks
     o = _fa.flash_attention_bhsd(
         qt, kt, vt, causal=causal, window=window, scale=scale,
         block_q=min(block_q, qt.shape[2]), block_k=min(block_k, kt.shape[2]),
         interpret=interpret, sq_real=Sq, skv_real=k.shape[1],
+        q_segment_ids=q_seg, k_segment_ids=k_seg,
     )
     return jnp.moveaxis(o[:, :, :Sq], 2, 1)
 

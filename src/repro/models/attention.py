@@ -81,6 +81,7 @@ def chunked_attention(
     prior_k=None,
     prior_v=None,
     prior_valid=None,
+    segment_ids=None,
 ):
     """Memory-bounded attention: O(q_chunk * S_kv) live scores.
 
@@ -94,8 +95,31 @@ def chunked_attention(
     slots as valid history at absolute positions ``[0, prior_valid[b])``
     and its own queries as positions ``prior_valid[b] + i`` — the
     suffix-prefill path of the paged KV pool's prefix reuse.
+
+    ``segment_ids`` ([B, Sq] int32, requires Sq == Skv) marks each token's
+    packed-prefill segment: token i may attend to token j only when their
+    ids match (on top of causal/window). Pad tokens carry id -1 — they
+    match only each other, so no real token reads a pad and no segment
+    reads across a boundary. NEG_INF masking makes the packed SCORES of a
+    segment's rows exactly the scores of that segment prefixed alone
+    (masked terms contribute exp(-1e30 - m) == 0.0 to the softmax), so a
+    segment's rows are bitwise invariant to whatever else shares the
+    packed buffer — tests/test_packing.py pins that law, plus the
+    engine-level token identity with the bucketed path. Mutually
+    exclusive with the prior-KV path.
     """
     B, Sq, H, hd = q.shape
+    if segment_ids is not None:
+        if prior_k is not None:
+            raise ValueError(
+                "segment_ids cannot combine with prior KV: packed prefill "
+                "has no per-segment cached prefix"
+            )
+        if segment_ids.shape != (B, k.shape[1]):
+            raise ValueError(
+                f"segment_ids must be [B, Skv]={B, k.shape[1]}: "
+                f"{segment_ids.shape}"
+            )
     Hkv = k.shape[2]
     G = H // Hkv
     hd_v = v.shape[-1]  # may differ from hd (MLA: qk_dim != v_head_dim)
@@ -121,6 +145,13 @@ def chunked_attention(
     if pad:
         q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
     qc_all = q.reshape(B, n_chunks, q_chunk, H, hd)
+    seg_all = None
+    if segment_ids is not None:
+        seg_q = segment_ids.astype(jnp.int32)
+        if pad:
+            # pad query rows get id -2: matches nothing, not even kv pads
+            seg_q = jnp.pad(seg_q, ((0, 0), (0, pad)), constant_values=-2)
+        seg_all = seg_q.reshape(B, n_chunks, q_chunk)
     kv_idx = jnp.arange(k.shape[1])
 
     def one_chunk(ci):
@@ -151,8 +182,16 @@ def chunked_attention(
             if causal:
                 mask &= q_idx[:, None] >= kv_idx[None, :]
             if window > 0:
+                # packed-index distance: within a contiguous segment this IS
+                # the in-segment distance, and cross-segment pairs are
+                # already masked below, so the window composes with packing.
                 mask &= kv_idx[None, :] > q_idx[:, None] - window
-            scores = jnp.where(mask, scores, NEG_INF)
+            if seg_all is not None:
+                smask = seg_all[:, ci][:, :, None] == segment_ids[:, None, :]
+                scores = jnp.where((mask[None] & smask)[:, None],
+                                   scores, NEG_INF)
+            else:
+                scores = jnp.where(mask, scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
         return out  # [B, Cq, H, hd_v]

@@ -186,6 +186,53 @@ def pad_cache_rows(caches, n_rows: int):
     return jax.tree_util.tree_map_with_path(visit, caches)
 
 
+def unpack_segments(caches, seg_starts, out_w: int):
+    """Un-pack a packed-prefill cache tree into per-segment rows.
+
+    ``caches`` come from :meth:`Model.prefill_packed`: every seq-keyed leaf
+    is [.., 1, T, rest] with segment ``j``'s KV occupying packed slots
+    ``[seg_starts[j], seg_starts[j] + len_j)``. Each leaf becomes
+    [.., N, out_w, rest] (N = len(seg_starts)): row ``j`` reads ``out_w``
+    consecutive packed slots from its start (clipped at T-1, so short/dummy
+    segments trail neighbor garbage — masked downstream by valid_len
+    exactly like bucketed-prefill pad garbage). Static per-row leaves
+    can't appear (packed prefill is attention-only, like the paged pool).
+    """
+    N = seg_starts.shape[0]
+    win = seg_starts[:, None] + jnp.arange(out_w)[None, :]  # [N, out_w]
+
+    def unpack(leaf, b_ax):
+        # leaf [.., 1, T, rest] -> drop the packed batch axis, gather rows
+        sq = jnp.squeeze(leaf, axis=b_ax)  # [.., T, rest]
+        g = jnp.take(sq, win, axis=b_ax, mode="clip")  # [.., N, out_w, rest]
+        return g
+
+    return _seq_visit(caches, unpack)
+
+
+def splice_suffix(prior, suffix, offset):
+    """Write a suffix cache tree into a same-rank prior at ring ``offset``.
+
+    prior/suffix: seq leaves [.., B, W, rest] / [.., B, C, rest] with
+    C + max(offset) <= W; ``offset`` is a traced scalar — one jit serves
+    every chunk of a chunked prefill. Non-seq leaves are passed through
+    from ``prior`` (chunked prefill is attention-only, so none appear).
+    """
+
+    def visit(path, prior_leaf):
+        key = _leaf_key(path)
+        base = _BASE_NDIM.get(key)
+        if base is None or key not in _SEQ_KEYS:
+            return prior_leaf
+        seq_ax = prior_leaf.ndim - base + 1
+        suf = _tree_get(suffix, path).astype(prior_leaf.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(
+            prior_leaf, suf, offset, axis=seq_ax
+        )
+
+    return jax.tree_util.tree_map_with_path(visit, prior)
+
+
 def request_cache_nbytes(caches, true_len: int, *, itemsize=None) -> int:
     """Bytes of ONE sequence's live cache in a pooled/padded tree.
 

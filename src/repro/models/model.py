@@ -237,6 +237,40 @@ class Model:
         total = (cached_lens + lengths).astype(jnp.int32)
         return logits[:, 0], caches, total
 
+    def prefill_packed(self, params, tokens, positions, segment_ids,
+                       last_idx, *, shard_ctx=None):
+        """Token-packed prefill: several prompts concatenated into ONE row.
+
+        tokens [1, T] hold the segments back to back (pad token 0 after the
+        last segment); ``positions`` [1, T] are segment-RELATIVE (each
+        prompt restarts at 0, so RoPE matches an unpacked prefill exactly);
+        ``segment_ids`` [1, T] carry the segment index per token (-1 on
+        pads); ``last_idx`` [N] is the packed index of each segment's last
+        real token (pad segments may point anywhere — their logits are
+        dummy rows the caller drops). Attention is segment-masked (see
+        chunked_attention), so each segment's hidden states — and its KV
+        run in the returned packed caches [.., 1, T, ..] — are EXACTLY what
+        a lone prefill of that prompt produces. Cost tracks total true
+        tokens: one [1, T] pass replaces a [rows, bucket] padded batch.
+        Returns (last_logits [N, V], packed_caches). Attention-only,
+        non-MLA, token-only stacks (the engine gates archs).
+        """
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens, shard_ctx).astype(self.dtype)
+        x, _, caches = stack_apply_full(
+            params["decoder"], cfg, x, positions,
+            causal=True, want_cache=True, shard_ctx=shard_ctx,
+            remat=self.remat, groups=self.groups, q_chunk=self.q_chunk,
+            unroll=self.unroll, remat_policy=self.remat_policy,
+            segment_ids=segment_ids,
+        )
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        x_last = jnp.take_along_axis(
+            x, last_idx[None, :, None], axis=1
+        )  # [1, N, d]
+        logits = lm_head(params["embed"], x_last, cfg.vocab_size)
+        return logits[0], caches
+
     def decode_step(self, params, caches, tokens, lengths, *, shard_ctx=None):
         """tokens: [B,1] -> (logits [B,V], new_caches, lengths+1)."""
         cfg = self.cfg

@@ -139,6 +139,7 @@ def apply_layer_full(
     q_chunk: int = 1024,
     prior=None,
     prior_valid=None,
+    segment_ids=None,
 ):
     """Returns (x, aux_loss, cache_or_None).
 
@@ -146,8 +147,14 @@ def apply_layer_full(
     positions) + ``prior_valid`` [B] enable suffix prefill over a cached
     prefix (paged prefix reuse); the caller must pass per-row absolute
     ``positions`` to match. Attention-only (the serving tier gates archs).
+
+    ``segment_ids`` [B, S] turns this into a packed prefill: attention is
+    confined within each id's contiguous token run (see chunked_attention).
+    Attention-only, non-MLA (latent-KV packing is not position-stable).
     """
     kind, is_moe = sig
+    if segment_ids is not None and (kind != "attn" or cfg.mla is not None):
+        raise ValueError("packed prefill requires plain attention layers")
     B, S, d = x.shape
     aux = jnp.zeros((), jnp.float32)
     cache = None
@@ -172,6 +179,7 @@ def apply_layer_full(
                 prior_k=None if prior is None else prior["k"],
                 prior_v=None if prior is None else prior["v"],
                 prior_valid=prior_valid,
+                segment_ids=segment_ids,
             )
             x = x + o.reshape(B, S, -1) @ lp["attn"]["wo"]
             if want_cache:
@@ -295,6 +303,7 @@ def stack_apply_full(
     remat_policy: str = "full",
     prior=None,
     prior_valid=None,
+    segment_ids=None,
 ):
     """Train/prefill/encoder pass. Returns (x, aux_total, caches).
 
@@ -302,7 +311,8 @@ def stack_apply_full(
     the returned caches) holding each layer's cached-prefix K/V; with
     ``prior_valid`` [B] it turns this into a suffix prefill (see
     apply_layer_full). When a group is scanned, the prior stack rides the
-    scan xs next to the params.
+    scan xs next to the params. ``segment_ids`` [B, S] makes every
+    attention layer a packed (segment-masked) prefill.
     """
     groups = groups or layer_groups(cfg)
     aux_total = jnp.zeros((), jnp.float32)
@@ -322,7 +332,7 @@ def stack_apply_full(
                     causal=causal, want_cache=want_cache, enc_out=enc_out,
                     shard_ctx=shard_ctx, q_chunk=q_chunk,
                     prior=None if pr is None else pr[f"l{j}"],
-                    prior_valid=prior_valid,
+                    prior_valid=prior_valid, segment_ids=segment_ids,
                 )
                 aux_b = aux_b + aux
                 if want_cache:

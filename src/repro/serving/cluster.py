@@ -224,6 +224,8 @@ class _RemoteEngineFacade:
         self.max_seq = int(kw.get("max_seq", 256))
         self.max_batch = int(kw.get("max_batch", 8))
         self.page = int(kw.get("page_size", 16))
+        self.packed = bool(kw.get("packed", False))
+        self.prefill_chunk = int(kw.get("prefill_chunk", 0))
 
     def _bucket(self, s: int) -> int:
         return min(max(_next_pow2(s), self.min_bucket), self.max_seq)
@@ -485,6 +487,13 @@ class Router:
         exact path — either way, co-locating equal keys means co-located
         requests share one compiled prefill."""
         if engine.bucketed_prefill and req.features is None:
+            if getattr(engine, "packed", False):
+                # packed engines compile per pow2 PACKED width (the sum of
+                # an admission's true lengths); keying on the per-request
+                # bucket still co-locates similar lengths, keeping each
+                # replica's packed widths stable without funneling every
+                # request to one replica
+                return ("packed", engine._bucket(len(req.prompt_tokens)))
             return ("bucket", engine._bucket(len(req.prompt_tokens)))
         feat = None if req.features is None else tuple(req.features.shape)
         return ("exact", len(req.prompt_tokens), feat)

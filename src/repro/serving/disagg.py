@@ -571,6 +571,16 @@ class DisaggregatedEngine(ServingEngine):
                 total += 4
         return total
 
+    def _new_chunk_prior(self):
+        """Chunked prefill's per-request prior lives on the PREFILL pod
+        slice: every chunk's suffix prefill and splice execute there, and
+        only the final chunk's artifact crosses the pod boundary (through
+        the same :meth:`_handoff` every admission takes)."""
+        prior = super()._new_chunk_prior()
+        if self.placement is not None:
+            prior = jax.device_put(prior, self.placement.prefill_sharding())
+        return prior
+
     # ------------------------------------------------------------------ #
     # prefill-side prefix store hooks (paged reuse)
     # ------------------------------------------------------------------ #

@@ -45,6 +45,19 @@ Fast path (the serving hot loop, rebuilt for throughput):
 * **Fused admission splice** — growing a prefill cache to the pool window
   and scattering it into the free slots (plus lengths/tokens/flag updates)
   is one jitted, donated call instead of a per-leaf ``.at[].set`` chain.
+* **Token-packed prefill** (``packed=True``) — instead of right-padding
+  each prompt to its bucket, an admission concatenates every prompt into
+  ONE ``[1, pow2(total_true_tokens)]`` sequence with per-token segment
+  ids (cross-prompt attention masked in the kernel, positions
+  segment-relative), so a ragged admission's prefill cost tracks the
+  tokens it actually has. The packed cache unpacks per segment in-jit
+  into the same bucketed-shaped artifact, and ``packed=False`` keeps the
+  bucketed path as the measured A/B baseline.
+* **Chunked prefill** (``prefill_chunk=C``) — prompts longer than C admit
+  as fixed-width suffix-prefill chunks, ONE per engine iteration after
+  the decode window top-up, so a long admission interleaves with live
+  decodes instead of head-of-line blocking them for its full prefill
+  wall (decode TPOT stays flat through a max_seq-token admission).
 
 ``legacy=True`` preserves the original synchronous loop (per-length jitted
 prefill, ``block_until_ready`` + host argmax + per-slot Python bookkeeping
@@ -96,6 +109,9 @@ WARM_PRETRACE_TABLE = frozenset({
     "_prefill_bucket_jit",  # one compile per pow2 bucket in warm()
     "_prefill_paged_jit",   # paged twin, same bucket grid
     "_prefill_suffix_jit",  # warmed per bucket when prefix_reuse is on
+    "_prefill_packed_jit",  # packed=True: one compile per pow2 packed width
+    "_chunk_jit",           # prefill_chunk>0: ONE shape (fixed-width prior)
+    "_chunk_pad_jit",       # chunk artifact row pad, one shape
 })
 
 
@@ -159,6 +175,17 @@ class _PagedJob:
     d_ids: list  # shared decode-side blocks (the row's pt prefix)
     own: list  # freshly-allocated blocks (suffix + decode growth)
     pt_row: list  # d_ids + own = the row's page table
+
+
+@dataclasses.dataclass
+class _ChunkJob:
+    """One in-progress chunked admission: its reserved slot, its
+    fixed-width prior cache tree, and the tokens prefilled so far."""
+
+    req: Request
+    slot: int
+    prior: object  # [.., 1, max_seq, ..] cache tree, donated per chunk
+    done: int = 0  # prompt tokens already prefilled + spliced
 
 
 class DecodePool:
@@ -539,6 +566,8 @@ class ServingEngine:
         page_size: int = 16,
         cache_blocks: Optional[int] = None,
         prefix_reuse: bool = True,
+        packed: bool = False,
+        prefill_chunk: int = 0,
     ):
         self.model = model
         self.params = params
@@ -597,10 +626,47 @@ class ServingEngine:
                 f"min_bucket {self.min_bucket} must be a multiple of "
                 f"page_size {self.page} (suffix buckets scatter page-wise)"
             )
+        # token-packed prefill: admitted prompts concatenate into ONE
+        # [1, pow2(total_tokens)] sequence with per-token segment ids, so
+        # prefill cost tracks total TRUE tokens instead of rows x bucket.
+        # Same soundness gate as bucketing (attention-only), plus non-MLA:
+        # segment masking rides chunked_attention's plain-score path.
+        # Auto-downgrades silently (like bucketed_prefill) so cross-arch
+        # callers can set packed=True unconditionally.
+        self.packed = (
+            bool(packed) and self.bucketed_prefill and model.cfg.mla is None
+        )
+        # chunked prefill: prompts longer than prefill_chunk admit as a
+        # sequence of fixed-width suffix-prefill chunks interleaved with
+        # decode steps (one chunk per engine iteration), so a long
+        # admission never stalls live decodes for its full prefill wall.
+        self.prefill_chunk = int(prefill_chunk)
+        if self.prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0: {prefill_chunk}")
+        if self.prefill_chunk:
+            if self.paged:
+                raise ValueError(
+                    "chunked prefill rides the ring pool (its fixed-width "
+                    "prior splices via dense dynamic_update_slice); use "
+                    "paged=False with prefill_chunk"
+                )
+            if self.prefill_chunk > max_seq:
+                raise ValueError(
+                    f"prefill_chunk {prefill_chunk} exceeds max_seq {max_seq}"
+                )
+        self._chunk_enabled = (
+            self.prefill_chunk > 0 and self.bucketed_prefill
+            and model.cfg.mla is None
+        )
+        self._chunk_jobs: deque = deque()  # in-progress chunked admissions
+        self._chunk_slots: set = set()  # slots reserved by chunk jobs
         # shared-prefix reuse rides the paged pool; MLA suffix prefill can't
-        # consume a gathered latent prior, so MLA pages without reuse
+        # consume a gathered latent prior, so MLA pages without reuse.
+        # Packed admissions interleave segments inside one sequence, so
+        # their pages never align with the prefix index — reuse turns off.
         self.prefix_reuse = bool(
             self.paged and prefix_reuse and model.cfg.mla is None
+            and not self.packed
         )
         self.prefix_index = (RadixPrefixIndex(self.page)
                              if self.prefix_reuse else None)
@@ -611,6 +677,11 @@ class ServingEngine:
         self.prefill_tokens_uncached = 0
         self.prefix_hits = 0
         self.prefix_hit_tokens = 0
+        # padded token-rows actually dispatched to prefill jits: a
+        # deterministic FLOPs proxy (bucketed pays npad*L per group,
+        # packed pays the pow2 packed width) — the A/B win the packing
+        # bench asserts without depending on wall-clock noise
+        self.prefill_padded_tokens = 0
         # prefill sampling key: its own stream (decoupled from the decode
         # pool's by fold_in), only ever consumed when temperature > 0
         self.prefill_key = jax.random.fold_in(
@@ -646,6 +717,13 @@ class ServingEngine:
         self._prefill_exact_jit = jax.jit(self._prefill_exact_impl)  # reprolint: disable=RL005 exact-shape path (feature payloads/SSM) compiles per ragged request shape and cannot be pre-traced; see warm() docstring
         self._prefill_paged_jit = jax.jit(self._prefill_paged_impl)
         self._prefill_suffix_jit = jax.jit(self._prefill_suffix_impl)
+        self._prefill_packed_jit = jax.jit(self._prefill_packed_impl)
+        # the chunk jits see ONE shape each (fixed-width prior + chunk), so
+        # chunked prefill adds exactly two compiles per engine; the prior
+        # is donated through every chunk (steady chunking holds one tree)
+        self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=(1,))
+        # (no donation: the row pad GROWS every leaf, so no buffer reuses)
+        self._chunk_pad_jit = jax.jit(self._chunk_pad_impl)
         self._prefill_shapes: set = set()
         self._prefill_cache = {}  # legacy per-(S, features) jit cache
 
@@ -731,6 +809,52 @@ class ServingEngine:
         )
         return self.pool._sample(logits, key), caches, lens
 
+    def _prefill_packed_impl(self, params, tokens, positions, seg_ids,
+                             seg_starts, last_idx, key):
+        """Token-packed prefill: ONE [1, T] sequence holding every admitted
+        prompt back to back, masked by per-token segment ids. Positions are
+        segment-relative (RoPE matches the unpacked run bitwise) and each
+        segment's first-token logits gather at its last real token.
+
+        The packed cache unpacks per segment in the SAME jit —
+        ``kvcache.unpack_segments`` windows each segment's rows out to the
+        pool's splice width — so the artifact downstream machinery sees is
+        shaped exactly like a bucketed admission's.
+        """
+        logits, packed = self.model.prefill_packed(
+            params, tokens, positions, seg_ids, last_idx
+        )
+        if self.paged:
+            out_w = min(tokens.shape[1], self.max_seq)
+        else:
+            out_w = self.max_seq
+        caches = kvc.unpack_segments(packed, seg_starts, out_w)
+        return self.pool._sample(logits, key), caches
+
+    def _chunk_impl(self, params, prior, tokens, lengths, cached, key):
+        """One chunk of a chunked prefill: suffix-prefill the [1, C] chunk
+        against the request's fixed-width prior tree (``prior_valid`` =
+        ``cached`` masks the unwritten tail), then splice the suffix cache
+        back into the prior at the chunk's offset. ``cached`` is traced, so
+        ONE compile serves every chunk of every request."""
+        logits, suffix, _total = self.model.prefill_suffix(
+            params, {"tokens": tokens}, lengths, cached, prior
+        )
+        prior = kvc.splice_suffix(prior, suffix, cached[0])
+        return self.pool._sample(logits, key), prior
+
+    def _chunk_pad_impl(self, prior):
+        """Final-chunk artifact shaping: pad the single-row prior tree out
+        to the admission width so the standard fused splice consumes it."""
+        return kvc.pad_cache_rows(prior, self.max_batch)
+
+    def _new_chunk_prior(self):
+        """Fresh fixed-width prior tree for one chunked admission (the
+        disaggregated tier overrides this to place it on the prefill pod
+        slice, so every chunk computes there and only the final artifact
+        crosses the pod boundary)."""
+        return self.model.init_cache(1, self.max_seq)
+
     def _next_prefill_key(self):
         """Advance the prefill sampling stream (one split per prefill
         dispatch). Temperature 0 never consumes entropy — the key passes
@@ -795,6 +919,12 @@ class ServingEngine:
         self.queue.append(req)
 
     def _free_slots(self):
+        """Admittable slots: the pool's free list minus slots a chunked
+        admission has reserved but not yet occupied (its request only
+        lands in ``pool.slots`` at the final chunk)."""
+        if self._chunk_slots:
+            return [s for s in self.pool.free_slots()
+                    if s not in self._chunk_slots]
         return self.pool.free_slots()
 
     @property
@@ -817,6 +947,16 @@ class ServingEngine:
             if L >= self.max_seq:
                 return out
             L = min(L * 2, self.max_seq)
+
+    def packed_grid(self) -> list:
+        """Every pow2 packed width a packed admission can dispatch:
+        ``min_bucket .. pow2(max_batch * max_seq)``."""
+        out, T = [], min(self.min_bucket, self.packed_cap())
+        while True:
+            out.append(T)
+            if T >= self.packed_cap():
+                return out
+            T = min(T * 2, self.packed_cap())
 
     def warm(self) -> float:
         """Pre-trace every shape the bucketed serving path can hit, so no
@@ -841,15 +981,27 @@ class ServingEngine:
         t0 = time.perf_counter()
         art = None
         if self.bucketed_prefill:
-            for L in self.bucket_grid():
-                art = self._warm_bucket(L)
-                if self.paged:
-                    # paged splice/handoff shapes follow the bucket width
-                    # (the suffix cache is never grown to max_seq), so the
-                    # admission path warms once per bucket, not once total
-                    self._warm_admit(art)
-                    if self.prefix_reuse:
-                        self._warm_suffix(L)
+            if self.packed:
+                # packed admissions replace the bucket groups entirely:
+                # warm the pow2 PACKED width grid instead
+                for T in self.packed_grid():
+                    art = self._warm_packed(T)
+                    if self.paged:
+                        self._warm_admit(art)
+            else:
+                for L in self.bucket_grid():
+                    art = self._warm_bucket(L)
+                    if self.paged:
+                        # paged splice/handoff shapes follow the bucket width
+                        # (the suffix cache is never grown to max_seq), so the
+                        # admission path warms once per bucket, not once total
+                        self._warm_admit(art)
+                        if self.prefix_reuse:
+                            self._warm_suffix(L)
+        if self._chunk_enabled:
+            # one chunk + one row-pad compile covers every chunked
+            # admission; the artifact is ring-shaped like a bucket's
+            art = self._warm_chunk()
         if not self.paged:
             self._warm_admit(art)
         # the decode step compiles once; its ring writes land in rows the
@@ -888,6 +1040,57 @@ class ServingEngine:
             cache1, np.full((npad,), npad, np.int32),  # every row OOB
             lens_d, next_toks, jnp.asarray(np.ones((npad,), np.int32)),
             [], [], n_rows=0, prefix_len=1,
+        )
+
+    def _warm_packed(self, T: int) -> PrefillArtifact:
+        """Compile one pow2 packed width and return the all-dummy-row
+        artifact (every token pad, every slot OOB), shaped and placed like
+        a real packed admission's."""
+        npad = self.max_batch
+        next_toks, caches = self._prefill_packed_jit(
+            self.prefill_params,
+            jnp.asarray(np.zeros((1, T), np.int32)),
+            jnp.asarray(np.zeros((1, T), np.int32)),
+            jnp.asarray(np.full((1, T), -1, np.int32)),
+            jnp.asarray(np.zeros((npad,), np.int32)),
+            jnp.asarray(np.zeros((npad,), np.int32)),
+            self.prefill_key,
+        )
+        self._prefill_shapes.add(("packed", T))
+        lens_d = jnp.asarray(np.ones((npad,), np.int32))
+        ones = jnp.asarray(np.ones((npad,), np.int32))
+        oob = np.full((npad,), npad, np.int32)
+        if self.paged:
+            out_w = min(T, self.max_seq)
+            return PrefillArtifact(
+                caches, oob, lens_d, next_toks, ones, [], [],
+                n_rows=0, prefix_len=1,
+                dest_blocks=np.zeros((npad, out_w // self.page), np.int32),
+                cached_lens=np.zeros((npad,), np.int32), bucket=out_w,
+            )
+        return PrefillArtifact(caches, oob, lens_d, next_toks, ones, [], [],
+                               n_rows=0, prefix_len=1)
+
+    def _warm_chunk(self) -> PrefillArtifact:
+        """Compile the chunk + row-pad jits (their shapes never vary) and
+        return an all-dummy ring-shaped artifact for the splice warm."""
+        npad = self.max_batch
+        C = self.prefill_chunk
+        next_tok, prior = self._chunk_jit(
+            self.prefill_params, self._new_chunk_prior(),
+            jnp.asarray(np.zeros((1, C), np.int32)),
+            jnp.asarray(np.ones((1,), np.int32)),
+            jnp.asarray(np.zeros((1,), np.int32)),
+            self.prefill_key,
+        )
+        caches = self._chunk_pad_jit(prior)
+        self._prefill_shapes.add(("chunk", C))
+        jax.block_until_ready(next_tok)
+        ones = jnp.asarray(np.ones((npad,), np.int32))
+        return PrefillArtifact(
+            caches, np.full((npad,), npad, np.int32), ones,
+            jnp.asarray(np.zeros((npad,), np.int32)), ones, [], [],
+            n_rows=0, prefix_len=1,
         )
 
     def _warm_suffix(self, L: int):
@@ -937,7 +1140,7 @@ class ServingEngine:
     # Admission
     # ------------------------------------------------------------------ #
     def _admit(self):
-        free = self.pool.free_slots()
+        free = self._free_slots()
         if not self.queue or not free:
             return
         order = sorted(
@@ -958,12 +1161,22 @@ class ServingEngine:
             for req in picked:
                 self._prefill_exact(next(free_it), req)
             return
+        packables: list[Request] = []
         buckets: dict[int, list[Request]] = {}
         for req in picked:
             if req.features is not None:  # ragged feature payloads: exact path
                 self._prefill_exact(next(free_it), req)
+            elif (self._chunk_enabled
+                  and len(req.prompt_tokens) > self.prefill_chunk):
+                # long prompts admit chunk-by-chunk, one chunk per engine
+                # iteration, interleaved with decode dispatches
+                self._chunk_admit(req, next(free_it))
+            elif self.packed:
+                packables.append(req)
             else:
                 buckets.setdefault(self._bucket(len(req.prompt_tokens)), []).append(req)
+        if packables:
+            self._prefill_packed(packables, [next(free_it) for _ in packables])
         for L, reqs in buckets.items():
             self._prefill_bucket(L, reqs, [next(free_it) for _ in reqs])
 
@@ -988,6 +1201,7 @@ class ServingEngine:
             slot_idx[j] = slot
         self.prefill_tokens_total += int(lens[:n].sum())
         self.prefill_tokens_uncached += int(lens[:n].sum())
+        self.prefill_padded_tokens += npad * L
         t0 = time.perf_counter()
         next_toks, cache1, lens_d = self._prefill_bucket_jit(
             self.prefill_params, jnp.asarray(toks), jnp.asarray(lens),
@@ -1014,6 +1228,179 @@ class ServingEngine:
             self._place(req, slot)
         self._t_mark = now  # prefill time is "preprocess", not "inference"
 
+    def _prefill_packed(self, reqs: list, slots: list, jobs: list = None):
+        """One token-packed prefill for every admitted prompt.
+
+        Prompts concatenate back to back into a single [1, T] sequence
+        (T = pow2 of the TOTAL true tokens, clamped to min_bucket), so a
+        ragged admission pays for the tokens it actually has instead of
+        rows x bucket width. Segment ids forbid cross-prompt attention and
+        segment-relative positions keep RoPE bitwise identical to the
+        unpacked run; the in-jit unpack emits the same bucketed-shaped
+        artifact every downstream path (splice, disagg handoff, paged
+        scatter) already consumes.
+
+        ``jobs`` is the paged admission's planned block rows; counters for
+        that path were already charged by :meth:`_admit_paged`.
+        """
+        n = len(reqs)
+        npad = self.max_batch
+        total = sum(len(r.prompt_tokens) for r in reqs)
+        T = min(max(_next_pow2(total), self.min_bucket), self.packed_cap())
+        toks = np.zeros((1, T), np.int32)
+        pos = np.zeros((1, T), np.int32)
+        seg = np.full((1, T), -1, np.int32)  # -1 = pad: matches nothing
+        seg_starts = np.zeros((npad,), np.int32)
+        last_idx = np.zeros((npad,), np.int32)
+        lens = np.zeros((npad,), np.int32)
+        maxn = np.zeros((npad,), np.int32)
+        slot_idx = np.full((npad,), npad, np.int32)  # OOB => dropped
+        off = 0
+        for j, (req, slot) in enumerate(zip(reqs, slots)):
+            s = len(req.prompt_tokens)
+            toks[0, off:off + s] = req.prompt_tokens
+            pos[0, off:off + s] = np.arange(s)
+            seg[0, off:off + s] = j
+            seg_starts[j] = off
+            last_idx[j] = off + s - 1
+            lens[j] = s
+            maxn[j] = req.max_new_tokens
+            slot_idx[j] = slot
+            off += s
+        # dummy rows keep seg_starts/last_idx 0: their unpacked rows and
+        # logits are garbage the OOB slot scatter drops
+        if jobs is None:
+            self.prefill_tokens_total += total
+            self.prefill_tokens_uncached += total
+        self.prefill_padded_tokens += T
+        t0 = time.perf_counter()
+        next_toks, caches = self._prefill_packed_jit(
+            self.prefill_params, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(seg), jnp.asarray(seg_starts),
+            jnp.asarray(last_idx), self._next_prefill_key(),
+        )
+        self._prefill_shapes.add(("packed", T))
+        if self.paged:
+            out_w = min(T, self.max_seq)
+            dest = np.zeros((npad, out_w // self.page), np.int32)
+            for j, job in enumerate(jobs):
+                for k in range(out_w // self.page):
+                    if k < len(job.pt_row):
+                        dest[j, k] = job.pt_row[k]
+            art = PrefillArtifact(
+                caches, slot_idx, jnp.asarray(lens), next_toks,
+                jnp.asarray(maxn), reqs, list(slots),
+                n_rows=n, prefix_len=int(lens.max()),
+                dest_blocks=dest, cached_lens=np.zeros((npad,), np.int32),
+                bucket=out_w,
+            )
+        else:
+            art = PrefillArtifact(
+                caches, slot_idx, jnp.asarray(lens), next_toks,
+                jnp.asarray(maxn), reqs, list(slots),
+                n_rows=n, prefix_len=int(lens.max()),
+            )
+        art, t_xfer = self._handoff(art)  # disagg: pod-boundary handoff
+        self.pool.splice(art)
+        toks_host = np.asarray(art.next_tokens)  # reprolint: disable=RL001 deliberate fence: packed 'preprocess' includes prefill device completion
+        dt = max(time.perf_counter() - t0 - t_xfer, 0.0)
+        now = time.perf_counter()
+        for j, (req, slot) in enumerate(zip(reqs, slots)):
+            rec = self._records[req.request_id]
+            rec.add("queue", max(t0 - rec.t_issue, 0.0))
+            rec.add("preprocess", dt / n)
+            req.generated.append(int(toks_host[j]))
+            req.t_first_token = now
+            self._place(req, slot)
+        self._t_mark = now
+
+    def packed_cap(self) -> int:
+        """Widest packed sequence this engine can dispatch: every slot
+        admitted at once, each at a full max_seq prompt, rounded to pow2."""
+        return _next_pow2(self.max_batch * self.max_seq)
+
+    # ------------------------------------------------------------------ #
+    # Chunked prefill: fixed-width chunks interleaved with decode steps
+    # ------------------------------------------------------------------ #
+    def _chunk_admit(self, req: Request, slot: int):
+        """Reserve ``slot`` and enqueue the request as a chunk job; the
+        prompt prefills ``prefill_chunk`` tokens per engine iteration from
+        :meth:`_chunk_step` until the final chunk splices it in."""
+        self._chunk_slots.add(slot)
+        self._chunk_jobs.append(_ChunkJob(req, slot, self._new_chunk_prior()))
+        P = len(req.prompt_tokens)
+        self.prefill_tokens_total += P
+        self.prefill_tokens_uncached += P
+
+    def _chunk_step(self):
+        """Run ONE chunk of the oldest chunk job (called once per engine
+        iteration, after decode dispatch, so live slots' decode steps are
+        already queued ahead of the chunk on the device stream).
+
+        The REMAINDER chunk runs FIRST (sizes r, C, C, ..., C with
+        r = ((P-1) % C) + 1): every later chunk is exactly C wide, so the
+        final chunk's logits gather at a fixed index and no splice can
+        overrun the prior (done + C <= P <= max_seq always). The first
+        chunk's pad-token rows write garbage KV beyond r that the next
+        chunk's splice overwrites; ``prior_valid`` masks them meanwhile.
+        """
+        if not self._chunk_jobs:
+            return
+        job = self._chunk_jobs[0]
+        C = self.prefill_chunk
+        P = len(job.req.prompt_tokens)
+        t0 = time.perf_counter()
+        rec = self._records[job.req.request_id]
+        if job.done == 0:
+            # pre-admission wait ends at the first chunk's dispatch
+            rec.add("queue", max(t0 - rec.t_issue, 0.0))
+        n = ((P - 1) % C) + 1 if job.done == 0 else C
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :n] = job.req.prompt_tokens[job.done:job.done + n]
+        next_tok, job.prior = self._chunk_jit(
+            self.prefill_params, job.prior, jnp.asarray(toks),
+            jnp.asarray(np.asarray([n], np.int32)),
+            jnp.asarray(np.asarray([job.done], np.int32)),
+            self._next_prefill_key(),
+        )
+        job.done += n
+        self.prefill_padded_tokens += C
+        self._prefill_shapes.add(("chunk", C))
+        if job.done < P:
+            np.asarray(next_tok)  # reprolint: disable=RL001 deliberate fence: chunk 'preprocess' includes device completion (and bounds host run-ahead to one chunk)
+            rec.add("preprocess", max(time.perf_counter() - t0, 0.0))
+            return
+        # final chunk: shape the prior into a standard bucketed-style
+        # artifact (row dim padded to npad, OOB dummy rows) and splice
+        self._chunk_jobs.popleft()
+        self._chunk_slots.discard(job.slot)
+        npad = self.max_batch
+        caches = self._chunk_pad_jit(job.prior)
+        job.prior = None  # donated away
+        slot_idx = np.full((npad,), npad, np.int32)
+        slot_idx[0] = job.slot
+        lens = np.zeros((npad,), np.int32)
+        lens[0] = P
+        maxn = np.zeros((npad,), np.int32)
+        maxn[0] = job.req.max_new_tokens
+        tok0 = int(np.asarray(next_tok)[0])  # reprolint: disable=RL001 deliberate fence: final-chunk 'preprocess' includes device completion
+        next_full = np.zeros((npad,), np.int32)
+        next_full[0] = tok0
+        art = PrefillArtifact(
+            caches, slot_idx, jnp.asarray(lens), jnp.asarray(next_full),
+            jnp.asarray(maxn), [job.req], [job.slot],
+            n_rows=1, prefix_len=P,
+        )
+        art, t_xfer = self._handoff(art)  # disagg: pod-boundary handoff
+        self.pool.splice(art)
+        dt = max(time.perf_counter() - t0 - t_xfer, 0.0)
+        rec.add("preprocess", dt)
+        job.req.generated.append(tok0)
+        now = time.perf_counter()
+        job.req.t_first_token = now
+        self._place(job.req, job.slot)
+        self._t_mark = now  # chunk time is "preprocess", not "inference"
+
     def _prefill_exact(self, slot: int, req: Request):
         """Exact-shape prefill for feature-carrying (vlm/audio) requests."""
         toks = jnp.asarray(req.prompt_tokens, jnp.int32)[None, :]
@@ -1022,6 +1409,7 @@ class ServingEngine:
             batch["features"] = jnp.asarray(req.features)
         self.prefill_tokens_total += len(req.prompt_tokens)
         self.prefill_tokens_uncached += len(req.prompt_tokens)
+        self.prefill_padded_tokens += len(req.prompt_tokens)
         t0 = time.perf_counter()
         logits, cache1, lengths1 = self._prefill_exact_jit(
             self.prefill_params, batch
@@ -1100,6 +1488,14 @@ class ServingEngine:
             self.prefill_tokens_uncached += P - cached
             jobs.append(_PagedJob(req, slot, cached, p_ids, d_ids, own,
                                   pt_row))
+        if self.packed:
+            # prefix reuse is off under packing (cached == 0 for every
+            # job): one packed dispatch replaces the bucket groups
+            self._prefill_packed(
+                [job.req for job in jobs], [job.slot for job in jobs],
+                jobs=jobs,
+            )
+            return
         groups: dict[tuple, list[_PagedJob]] = {}
         for job in jobs:
             L = self._bucket(len(job.req.prompt_tokens) - job.cached)
@@ -1217,6 +1613,7 @@ class ServingEngine:
                 if cpages + k < len(job.pt_row):
                     dest[j, k] = job.pt_row[cpages + k]
             prior_pt[j, : len(job.p_ids)] = job.p_ids
+        self.prefill_padded_tokens += npad * L
         t0 = time.perf_counter()
         key = self._next_prefill_key()
         if has_prior:
@@ -1410,6 +1807,10 @@ class ServingEngine:
             return self._step_legacy()
         self._admit()
         self._dispatch()
+        # one chunk AFTER the decode top-up: live slots' steps are already
+        # on the device stream, so the chunk interleaves instead of
+        # head-of-line blocking a full prefill
+        self._chunk_step()
         done = self._harvest()
         if self._prefill_finished:  # budget met by the prefill token itself
             done = self._prefill_finished + done
@@ -1422,7 +1823,7 @@ class ServingEngine:
         the drain condition, shared with the cluster tier's router and
         the open-loop load generator."""
         return (not self.queue and self.pool.all_free
-                and not self.pool.window)
+                and not self.pool.window and not self._chunk_jobs)
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Response]:
         out = []
@@ -1652,6 +2053,7 @@ class EnginePipeline:
                     self._outputs.extend(done)
                     self.emitted += len(done)
                 eng._dispatch(outstanding=self._outstanding)
+                eng._chunk_step()  # one chunk behind the decode top-up
                 if eng.pool.window:
                     entry = eng.pool.pop_oldest()
                     eng._backlog_entries.append(entry)
@@ -1728,8 +2130,8 @@ class EnginePipeline:
         with self._lock:
             eng = self.engine
             return (not eng.queue and eng.pool.all_free
-                    and not eng.pool.window and self._outstanding == 0
-                    and not self._outputs)
+                    and not eng.pool.window and not eng._chunk_jobs
+                    and self._outstanding == 0 and not self._outputs)
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Response]:
         out = []
@@ -1745,24 +2147,25 @@ class EnginePipeline:
         (what the worker returns on every RPC round-trip)."""
         with self._lock:
             eng = self.engine
-            free = len(eng.pool.free_slots())
+            free = len(eng._free_slots())  # chunk-reserved slots are busy
             queued = sum(r.max_new_tokens for r in eng.queue)
             live = sum(
                 r.max_new_tokens - len(r.generated)
                 for r in eng.pool.slots if r is not None
             )
+            chunking = sum(j.req.max_new_tokens for j in eng._chunk_jobs)
             return {
                 "queue_depth": len(eng.queue),
                 "occupancy": eng.max_batch - free,
                 "free_slots": free,
-                "outstanding_tokens": queued + live,
+                "outstanding_tokens": queued + live + chunking,
                 "steps": self.steps,
                 "busy_slot_steps": self.busy_slot_steps,
                 "submitted": self.submitted,
                 "emitted": self.emitted,
                 "submitted_bytes": self.submitted_bytes,
                 "idle": (not eng.queue and eng.pool.all_free
-                         and not eng.pool.window
+                         and not eng.pool.window and not eng._chunk_jobs
                          and self._outstanding == 0 and not self._outputs),
             }
 

@@ -53,6 +53,66 @@ def model_bank():
     return get
 
 
+@pytest.fixture(scope="session")
+def engine_bank(model_bank):
+    """Session-scoped warmed-ServingEngine cache, KEYED ON THE ENGINE-KNOB
+    TUPLE (plus cfg/dtype/seed), so A/B tests that toggle knobs
+    (packed/paged/chunked/...) re-trace each variant once per session
+    instead of once per test.
+
+    A cache hit asserts the engine drained clean and then resets its
+    mutable serving state (pool state, records, store, counters) while
+    KEEPING the compiled jits — the whole point of sharing. Tests that
+    mutate engine structure (placement, legacy loop) or need a cold
+    engine should construct their own.
+    """
+    import jax.numpy as jnp
+
+    engines: dict = {}
+
+    def get(cfg, dtype=jnp.bfloat16, seed=0, *, max_batch, max_seq,
+            **engine_kw):
+        from repro.serving.engine import ServingEngine
+
+        key = (cfg, str(dtype), seed, max_batch, max_seq,
+               tuple(sorted(engine_kw.items())))
+        if key not in engines:
+            model, params = model_bank(cfg, dtype, seed)
+            engines[key] = ServingEngine(
+                model, params, max_batch=max_batch, max_seq=max_seq,
+                **engine_kw,
+            )
+            return engines[key]
+        eng = engines[key]
+        assert eng.idle, "engine_bank reuse requires a drained engine"
+        # fresh serving state, warm jit caches
+        eng.pool.reset_state()
+        eng.queue.clear()
+        eng._records.clear()
+        eng._finished_ids.clear()
+        eng._backlog_entries.clear()
+        eng._prefill_finished = []
+        eng._chunk_jobs.clear()
+        eng._chunk_slots.clear()
+        eng.store.__init__()
+        if eng.prefix_reuse:
+            # reset_state re-zeroed the block allocator; a stale radix
+            # index would dangle references into it
+            from repro.serving.prefix import RadixPrefixIndex
+
+            eng.prefix_index = RadixPrefixIndex(eng.page)
+        eng.prefill_tokens_total = 0
+        eng.prefill_tokens_uncached = 0
+        eng.prefill_padded_tokens = 0
+        eng.prefix_hits = 0
+        eng.prefix_hit_tokens = 0
+        eng.decode_steps = 0
+        eng.useful_steps = 0
+        return eng
+
+    return get
+
+
 def arch_cases(slow_names=()):
     """Parametrize over all architectures, marking the named ones slow."""
     from repro.configs import ARCHITECTURES

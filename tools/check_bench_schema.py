@@ -34,6 +34,15 @@ SCHEMAS = {
         "serving.fast_path.tokens_per_s",
         "serving.fast_path.prefill_compiles",
         "serving.speedup.tokens_per_s",
+        "packed_prefill.footprint.bucketed.prefill_padded_tokens",
+        "packed_prefill.footprint.packed.prefill_padded_tokens",
+        "packed_prefill.footprint.packed.pad_overhead",
+        "packed_prefill.footprint.token_identical",
+        "packed_prefill.head_of_line.unchunked.worst_step_ms",
+        "packed_prefill.head_of_line.chunked.worst_step_ms",
+        "packed_prefill.head_of_line.chunked.head_of_line_ratio",
+        "packed_prefill.head_of_line.chunked.decode_step_ms",
+        "packed_prefill.head_of_line.tpot_bound_ok",
         "ragged_decode_kernel.ragged_lens_us",
         "ragged_decode_kernel.dense_lens_us",
     ],
