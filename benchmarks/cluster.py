@@ -284,7 +284,8 @@ def bench_token_identity(model, params, cfg) -> dict:
     return out
 
 
-def bench_process_cluster(model, params, cfg, *, quick: bool) -> dict:
+def bench_process_cluster(model, params, cfg, *, quick: bool,
+                          trace_out: str = "BENCH_trace.json") -> dict:
     """Process-per-replica measurement: REAL parallelism, not modeled.
 
     Two worker processes (each its own XLA client on one forced host
@@ -302,7 +303,15 @@ def bench_process_cluster(model, params, cfg, *, quick: bool) -> dict:
     through ``backend="process"`` is token-identical to the in-process
     Router baseline, with request payload bytes conserved across the RPC
     wire and one record per request surviving the merge.
+
+    The timed run doubles as the multi-process tracing smoke: tracing is
+    on in the router AND both workers (worker spans ride back on the
+    harvest/drain RPC replies and are rebased onto the router clock), and
+    the merged timeline exports to ``trace_out`` as Chrome trace-event
+    JSON — asserted non-empty, json-round-trippable, and containing spans
+    from >= 2 distinct processes on the one rebased clock.
     """
+    from repro.core import trace as rtrace
     from repro.serving import ServingCluster, poisson_schedule, run_open_loop
 
     n_cpus = len(os.sched_getaffinity(0))
@@ -323,6 +332,9 @@ def bench_process_cluster(model, params, cfg, *, quick: bool) -> dict:
             max_new, seed=seed,
         )[:per_replica]
 
+    # tracing on BEFORE build: the init spec carries the flag to the
+    # workers, so both sides of the RPC emit spans for the timed drains
+    rtrace.enable_tracing(process="router")
     with ServingCluster.build(
         model, params, n_replicas=2, engine="fused", policy="round_robin",
         backend="process", param_seed=0, warmup=True,
@@ -347,6 +359,26 @@ def bench_process_cluster(model, params, cfg, *, quick: bool) -> dict:
         concurrent_s = time.perf_counter() - t0
         assert len(done) == 2 * per_replica, len(done)
         tel = pc.telemetry()
+
+    # --- merged-timeline export: the multi-process tracing smoke ------- #
+    tr = rtrace.Trace.from_buffer()
+    procs = tr.processes()
+    assert len(procs) >= 2 and any(p.startswith("replica") for p in procs), (
+        f"trace must span the router and >= 1 worker process: {procs}"
+    )
+    obj = tr.export_chrome(trace_out)
+    with open(trace_out) as f:
+        reloaded = json.load(f)  # must round-trip
+    assert reloaded["traceEvents"] and obj["traceEvents"], "empty trace export"
+    trace_row = {
+        "path": trace_out,
+        "processes": procs,
+        "spans": len(tr),
+        "events": len(obj["traceEvents"]),
+        "dropped": rtrace.tracer().stats()["dropped"],
+        "export_ok": True,  # asserted above
+    }
+    rtrace.disable_tracing()
 
     seq_sum = sum(seq_walls)
     ratio = concurrent_s / seq_sum
@@ -407,10 +439,11 @@ def bench_process_cluster(model, params, cfg, *, quick: bool) -> dict:
         "request_bytes_conserved": bytes_ok,
         "records_conserved": records_ok,
         "ipc": tel["ipc"],
+        "trace": trace_row,
     }
 
 
-def bench_cluster(quick: bool) -> dict:
+def bench_cluster(quick: bool, *, trace_out: str = "BENCH_trace.json") -> dict:
     import jax
 
     from benchmarks.serving import micro_config
@@ -467,7 +500,7 @@ def bench_cluster(quick: bool) -> dict:
         # the multiprocess smoke: real OS-process replicas behind the
         # socket RPC control plane, timed sequential-vs-concurrent
         "process_cluster": bench_process_cluster(
-            model, params, cfg, quick=quick,
+            model, params, cfg, quick=quick, trace_out=trace_out,
         ),
     }
 
@@ -477,12 +510,15 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="small workload (CI smoke)")
     ap.add_argument("--out", default="BENCH_cluster.json")
+    ap.add_argument("--trace-out", default="BENCH_trace.json",
+                    help="Chrome trace-event JSON export from the "
+                         "process-cluster smoke (Perfetto-loadable)")
     args = ap.parse_args()
 
     result = {
         "benchmark": "multi-replica cluster: router policy x arrival rate "
                      "x transfer mechanism",
-        "cluster": bench_cluster(args.quick),
+        "cluster": bench_cluster(args.quick, trace_out=args.trace_out),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
@@ -513,6 +549,9 @@ def main():
         f"tokens vs in-process: "
         f"{'ok' if proc['token_identical_vs_inprocess'] else 'FAIL'}"
     )
+    trc = proc["trace"]
+    print(f"# chrome trace: {trc['path']} ({trc['events']} events, "
+          f"{trc['spans']} spans from processes {trc['processes']})")
 
 
 if __name__ == "__main__":

@@ -170,6 +170,7 @@ def bench_disagg(quick: bool):
     import jax
 
     from benchmarks.serving import micro_config
+    from repro.core import trace
     from repro.core.transfer import TransferMode
     from repro.models import Model
     from repro.serving import DisaggregatedEngine, ServingEngine, make_pod_mesh
@@ -201,7 +202,15 @@ def bench_disagg(quick: bool):
                 "decode_pods": list(pl.decode_pods),
                 "disjoint": pl.disjoint,
             }
+        # per-mechanism traced drain: fresh span ring per mode, so the
+        # exported per-stage walls (what fig_stage_breakdown stacks) are
+        # this mechanism's alone
+        trace.enable_tracing(process="main")
         tokens, ttfts, wall = run_workload(eng, cfg, lens, max_new)
+        stage_walls: dict = {}
+        for s in trace.Trace.from_buffer().spans:
+            stage_walls[s.name] = stage_walls.get(s.name, 0.0) + s.wall
+        trace.disable_tracing()
         recs = eng.store.records
         charge = sum(r.stage_s.get("transfer", 0.0) for r in recs) / len(recs)
         match = sum(a == b for a, b in zip(tokens, base_tokens)) / len(tokens)
@@ -216,6 +225,11 @@ def bench_disagg(quick: bool):
             "ttft_s_mean": round(sum(ttfts) / len(ttfts), 5),
             "wall_s": round(wall, 3),
             "token_match_vs_single_engine": round(match, 3),
+            # summed span wall per span name over the traced drain — the
+            # per-mechanism stage breakdown fig_stage_breakdown renders
+            "stage_walls_s": {
+                k: round(v, 5) for k, v in sorted(stage_walls.items())
+            },
         }
 
     hbm = rows[TransferMode.DIRECT_HBM.value]

@@ -313,6 +313,75 @@ def fig_prefix_hit_rate_sweep():
     return claims
 
 
+def fig_stage_breakdown():
+    """Repo-grown figure: stacked per-stage latency bars per KV-transfer
+    mechanism (DIRECT_HBM / DIRECT_DMA / HOST_STAGED) — the repo's version
+    of the paper's stage-breakdown figures (Figs. 6/8), rendered from the
+    span walls exported by the traced drains in benchmarks/disagg.py
+    (``stage_walls_s`` in ``BENCH_disagg.json``). The ``request`` root span
+    covers its children and the ``submit`` span is instant, so both are
+    excluded from the stack."""
+    import json
+    from pathlib import Path
+
+    path = Path(__file__).resolve().parents[1] / "BENCH_disagg.json"
+    if not path.exists():
+        return [("fig-stage: BENCH_disagg.json present "
+                 "(run benchmarks.disagg first)", False)]
+    rows = json.loads(path.read_text())["disagg"]["disaggregated"]
+    mechs = sorted(rows)
+    walls = {m: rows[m].get("stage_walls_s", {}) for m in mechs}
+    for m in mechs:
+        for stage, v in sorted(walls[m].items()):
+            emit(f"figstage/{m}/{stage}", v * 1e6)
+
+    stacked = {
+        m: {k: v for k, v in walls[m].items()
+            if k not in ("request", "submit") and v > 0}
+        for m in mechs
+    }
+    claims = [
+        ("fig-stage: every mechanism exports traced stage walls",
+         all(walls[m] for m in mechs)),
+        ("fig-stage: every mechanism has a transfer span wall",
+         all(walls[m].get("transfer", 0.0) > 0 for m in mechs)),
+        ("fig-stage: every mechanism has prefill + decode span walls",
+         all(any(k.startswith("prefill.") for k in walls[m])
+             and "decode.window" in walls[m] for m in mechs)),
+        ("fig-stage: stage vocabularies agree across mechanisms",
+         len({frozenset(stacked[m]) for m in mechs}) == 1),
+    ]
+    _plot_stage_breakdown(stacked, mechs, path.parent / "BENCH_stages.png")
+    return claims
+
+
+def _plot_stage_breakdown(stacked, mechs, out_path):
+    """Stacked-bar render (skipped when matplotlib is unavailable — the
+    claims above carry the validation either way)."""
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return
+    stages = sorted({k for m in mechs for k in stacked[m]})
+    fig, ax = plt.subplots(figsize=(7, 4))
+    bottom = [0.0] * len(mechs)
+    for stage in stages:
+        vals = [stacked[m].get(stage, 0.0) * 1e3 for m in mechs]
+        ax.bar(mechs, vals, bottom=bottom, label=stage)
+        bottom = [b + v for b, v in zip(bottom, vals)]
+    ax.set_ylabel("summed span wall (ms)")
+    ax.set_title("Per-stage breakdown by KV-transfer mechanism "
+                 "(benchmarks/disagg.py traced drains)")
+    ax.legend(fontsize=8)
+    ax.grid(True, axis="y", alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(out_path, dpi=120)
+    plt.close(fig)
+
+
 def _plot_prefix_sweep(rows, rates, out_path):
     """Three-panel hit-rate sweep plot (skipped when matplotlib is
     unavailable — the claims above carry the validation either way)."""
@@ -344,6 +413,7 @@ def _plot_prefix_sweep(rows, rates, out_path):
 ALL_FIGURES = [
     fig05_transport_single_client,
     fig_prefix_hit_rate_sweep,
+    fig_stage_breakdown,
     fig06_breakdown,
     fig07_overhead_vs_local,
     fig08_stage_fractions,

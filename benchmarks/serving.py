@@ -250,6 +250,100 @@ def bench_packed_prefill(quick: bool):
     }
 
 
+def bench_tracing(quick: bool):
+    """Tracing on/off A/B + span/stage reconciliation (both asserted).
+
+    Two claims, asserted on every run (including ``--quick``):
+
+    - ``overhead``: enabling span tracing on the warmed fast-path drain
+      costs < 3% wall (min-of-rounds on both arms, so a scheduler blip on
+      one round can't fake a regression either way).
+    - ``reconcile``: the traced drain's span trees reconcile against its
+      charged ``stage_s`` — every request has exactly one root span, the
+      total span wall covers each charged stage, and process-level lanes
+      are non-overlapping (``core.trace.Trace.reconcile``).
+    """
+    import jax
+
+    from repro.core import trace
+    from repro.models import Model
+    from repro.serving import ServingEngine
+
+    cfg = micro_config()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+
+    n_req = 8 if quick else 16
+    lens = [5 + 6 * i for i in range(n_req)]
+    max_new = 8 if quick else 16
+    rounds = 5
+
+    # one warmed engine per arm, built BEFORE timing: the A/B compares
+    # steady-state drains, not construction/compile walls
+    engines = {
+        arm: ServingEngine(model, params, max_batch=4, max_seq=256,
+                           inflight=4, warmup=True)
+        for arm in ("off", "on")
+    }
+
+    def drain(arm: str) -> float:
+        eng = engines[arm]
+        reqs = make_requests(cfg, lens, max_new)
+        if arm == "on":
+            trace.enable_tracing(process="main")  # reset=True: fresh ring
+        else:
+            trace.disable_tracing()
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r, time.perf_counter())
+        out = eng.run_until_drained(max_steps=100_000)
+        wall = time.perf_counter() - t0
+        assert len(out) == len(reqs), (len(out), len(reqs))
+        return wall
+
+    # interleaved rounds so drift (thermal, background load) hits both
+    # arms equally; min-of-rounds is the steady-state estimate
+    walls = {"off": [], "on": []}
+    for _ in range(rounds):
+        for arm in ("off", "on"):
+            walls[arm].append(drain(arm))
+
+    off_wall = min(walls["off"])
+    on_wall = min(walls["on"])
+    overhead = on_wall / off_wall - 1.0
+    assert overhead < 0.03, (
+        f"tracing overhead {overhead:.4f} exceeds the 3% budget "
+        f"(off {off_wall:.4f}s, on {on_wall:.4f}s)"
+    )
+
+    # reconcile the LAST traced round (the buffer was reset each enable,
+    # so exactly that round's spans are resident) against its records
+    tr = trace.Trace.from_buffer()
+    problems = tr.reconcile(engines["on"].store.records)
+    assert not problems, "span/stage reconciliation failed:\n" + \
+        "\n".join(problems)
+    n_spanned = len(tr.by_request())
+    trace.disable_tracing()  # don't leak tracing into later benches
+
+    return {
+        "workload": {
+            "model": cfg.name, "requests": n_req, "max_new_tokens": max_new,
+            "rounds": rounds, "max_batch": 4, "max_seq": 256,
+        },
+        "overhead": {
+            "off_wall_s": round(off_wall, 4),
+            "on_wall_s": round(on_wall, 4),
+            "overhead_frac": round(overhead, 4),
+            "overhead_ok": True,  # asserted above
+        },
+        "reconcile": {
+            "n_requests": n_spanned,
+            "n_spans": len(tr),
+            "reconcile_ok": True,  # asserted above
+        },
+    }
+
+
 def bench_ragged_kernel(quick: bool):
     """Ragged vs dense decode-attention (interpret mode on CPU)."""
     import jax
@@ -295,6 +389,7 @@ def main():
         "serving": bench_serving(args.quick),
         "packed_prefill": bench_packed_prefill(args.quick),
         "ragged_decode_kernel": bench_ragged_kernel(args.quick),
+        "tracing": bench_tracing(args.quick),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

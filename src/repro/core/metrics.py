@@ -119,6 +119,12 @@ def slo_summary(responses, *, warmup: int = 0) -> dict:
     * ``e2e_s``   — end-to-end request latency (``total_s``).
     * ``queue_s`` — the pre-admission 'queue' stage (submit -> prefill
       pick), the component load imbalance shows up in.
+    * ``stages``  — one :func:`summarize` dict per charged stage name
+      (queue/preprocess/transfer/inference/request/response/copy_*...),
+      the paper's per-stage breakdown table straight from cluster
+      telemetry — no raw-record access needed. A response missing a
+      stage contributes 0.0 for it, so every stage's ``n`` matches the
+      response count.
     """
     responses = list(responses)
     if warmup < 0:
@@ -128,6 +134,7 @@ def slo_summary(responses, *, warmup: int = 0) -> dict:
         (r.total_s - r.ttft_s) / (len(r.tokens) - 1)
         for r in rs if len(r.tokens) > 1
     ]
+    stage_names = sorted({s for r in rs for s in r.stage_s})
     return {
         "n": len(rs),
         "warmup_dropped": min(warmup, len(responses)),
@@ -135,4 +142,8 @@ def slo_summary(responses, *, warmup: int = 0) -> dict:
         "tpot_s": summarize(tpots),
         "e2e_s": summarize(r.total_s for r in rs),
         "queue_s": summarize(r.stage_s.get("queue", 0.0) for r in rs),
+        "stages": {
+            s: summarize(r.stage_s.get(s, 0.0) for r in rs)
+            for s in stage_names
+        },
     }

@@ -80,7 +80,9 @@ import dataclasses
 import time
 from typing import Optional
 
+from repro.core import trace
 from repro.core.metrics import jain_index, merge_record_streams, slo_summary
+from repro.core.obs import Registry, Sampler
 from repro.core.profiler import ProfileStore, RequestRecord
 from repro.serving.engine import ServingEngine, _next_pow2
 
@@ -187,6 +189,15 @@ class Replica:
     def store_records(self) -> list:
         return list(self.engine.store.records)
 
+    def metrics_snapshot(self) -> dict:
+        return self.engine.metrics_snapshot()
+
+    def trace_flush(self) -> None:
+        """Close the engine's open decode window (drain-end hook)."""
+        tf = getattr(self.engine, "trace_flush", None)
+        if callable(tf):
+            tf()
+
     def drain(self, deadline_s: float = 120.0) -> list:
         """Step to idle (bounded); returns the finished responses."""
         out = []
@@ -199,6 +210,7 @@ class Replica:
                     f"replica {self.index} drain exceeded {deadline_s}s"
                 )
         out.extend(self.step())
+        self.trace_flush()
         return out
 
     def close(self) -> None:
@@ -268,6 +280,12 @@ class ProcessReplica:
         self.client = client  # ipc.ReplicaClient
         self.pods = pods
         self.routed = 0
+        # debug-mode stamp validation after every cross-clock rebase (the
+        # engines' own debug_stamps knob checks the same stamps child-side
+        # BEFORE the rebase; this catches a bad offset sign/staleness)
+        self.debug_stamps = bool(
+            (spec.get("engine_kw") or {}).get("debug_stamps")
+        )
         self.engine = _RemoteEngineFacade(self, spec)
         self._load = {
             "queue_depth": 0, "occupancy": 0,
@@ -363,6 +381,16 @@ class ProcessReplica:
                 stub.cpu_s += child.cpu_s
                 stub.transfer_wall_s += child.transfer_wall_s
                 stub.t_done = child.t_done - self.clock_offset
+            if self.debug_stamps:
+                # rebased completion must stay after the parent-side issue
+                # stamp (tolerating the RTT/2 handshake estimate error) —
+                # an inversion here means the offset sign flipped or went
+                # stale, exactly the bug this mode exists to catch
+                trace.validate_stamps(
+                    stub.t_issue, 0.0, stub.t_done, tol=0.05,
+                    where=f"replica{self.index} record {stub.request_id} "
+                          f"after clock rebase",
+                )
             self._store.add(stub)
             out.append(rsp)
         return out
@@ -386,6 +414,12 @@ class ProcessReplica:
 
     def telemetry(self) -> dict:
         return self.client.telemetry()
+
+    def metrics_snapshot(self) -> dict:
+        return self.client.telemetry().get("metrics", {})
+
+    def trace_flush(self) -> None:
+        pass  # the worker flushes its own windows at drain
 
     def close(self) -> None:
         self.client.close()
@@ -546,6 +580,11 @@ class ServingCluster:
         self.responses: list = []  # completion-ordered, for telemetry
         self._where: dict = {}  # request_id -> replica index
         self._closed = False
+        # cluster-level observability: the sampler polls per-replica
+        # queue depth / occupancy into this registry's histograms while a
+        # drain runs; telemetry() embeds its snapshot
+        self.registry = Registry()
+        self._sampler: Optional[Sampler] = None
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -616,10 +655,15 @@ class ServingCluster:
 
         replicas = []
         for i, pods in enumerate(slices):
+            # per-replica trace tag: in-process replicas share MainThread,
+            # so the tag is what keeps their process-level spans (decode
+            # windows, handoffs) on distinct trace lanes
+            kw_i = dict(engine_kw)
+            kw_i.setdefault("trace_tag", f"replica{i}")
             if engine == "fused":
                 eng = ServingEngine(
                     model, place_on_slice(params, mesh, pods),
-                    warmup=False, **engine_kw,
+                    warmup=False, **kw_i,
                 )
                 eng.pool.place(slice_sharding(mesh, pods))
                 if warmup:
@@ -629,7 +673,7 @@ class ServingCluster:
 
                 eng = DisaggregatedEngine(
                     model, params, mesh=pod_slice_mesh(mesh, pods),
-                    warmup=warmup, **engine_kw,
+                    warmup=warmup, **kw_i,
                 )
             replicas.append(Replica(i, eng, pods))
         out = cls(replicas, policy=policy, router=router)
@@ -660,6 +704,10 @@ class ServingCluster:
             "engine": engine,
             "engine_kw": dict(engine_kw, warmup=warmup),
             "backlog": int(backlog),
+            # workers inherit the parent's tracing state at build time;
+            # their spans ship back on harvest/telemetry/drain replies and
+            # are rebased + relabeled by the ReplicaClient at ingest
+            "tracing": trace.tracing_enabled(),
         }
         clients, replicas = [], []
         try:
@@ -685,7 +733,12 @@ class ServingCluster:
         """Route ``req`` to a replica and join its admission queue; the
         replica's engine stamps arrival and charges the modeled ingress.
         Returns the replica index (recorded for telemetry)."""
+        t0 = time.perf_counter()
         i = self.router.pick(req, self.replicas)
+        trace.tracer().emit(
+            "router.pick", t0, time.perf_counter(),
+            request_id=req.request_id, policy=self.router.policy, replica=i,
+        )
         rep = self.replicas[i]
         rep.submit(req, now)
         rep.routed += 1
@@ -724,6 +777,8 @@ class ServingCluster:
         for _ in range(max_steps):
             out.extend(self.step())
             if self.idle:
+                for rep in self.replicas:
+                    rep.trace_flush()
                 break
         return out
 
@@ -781,6 +836,36 @@ class ServingCluster:
         self.responses.extend(done)
         return done
 
+    # ------------------------------------------------------------------ #
+    # background observability sampler
+    # ------------------------------------------------------------------ #
+    def start_sampler(self, interval_s: float = 0.005) -> Sampler:
+        """Start the background queue-depth / slot-occupancy sampler:
+        every ``interval_s`` it observes each replica's counters into
+        same-named histograms in :attr:`registry` (process replicas read
+        the last RPC load snapshot — no extra wire traffic). Pair with
+        :meth:`stop_sampler`; sources that raise are captured and
+        re-raised there, never swallowed."""
+        if self._sampler is not None:
+            raise RuntimeError("sampler already running")
+        sources = {}
+        for rep in self.replicas:
+            sources[f"replica{rep.index}.queue_depth"] = (
+                lambda r=rep: r.queue_depth
+            )
+            sources[f"replica{rep.index}.occupancy"] = (
+                lambda r=rep: r.occupancy
+            )
+        self._sampler = Sampler(
+            self.registry, sources, interval_s=interval_s
+        ).start()
+        return self._sampler
+
+    def stop_sampler(self, *, check: bool = True) -> None:
+        if self._sampler is not None:
+            s, self._sampler = self._sampler, None
+            s.stop(check=check)
+
     def close(self) -> None:
         """Shut replicas down (terminate worker processes for the
         process backend). Idempotent; safe on error paths — always
@@ -789,6 +874,7 @@ class ServingCluster:
         if self._closed:
             return
         self._closed = True
+        self.stop_sampler(check=False)
         for rep in self.replicas:
             try:
                 rep.close()
@@ -826,6 +912,13 @@ class ServingCluster:
             "balance_index_routed": round(
                 jain_index([rep.routed for rep in self.replicas]), 4
             ),
+            # unified metrics surface: each replica's engine counters
+            # through the obs.Registry (process replicas ship theirs over
+            # the telemetry RPC), plus the cluster-level sampler registry
+            # and this process's trace-buffer health
+            "metrics": [rep.metrics_snapshot() for rep in self.replicas],
+            "obs": self.registry.snapshot(),
+            "trace": trace.tracer().stats(),
         }
         if self.parallelism == "process-per-replica":
             # control-plane conservation counters: what each worker

@@ -76,6 +76,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core import trace
 from repro.core.transfer import (
     MODE_TRANSPORT,
     TransferMode,
@@ -770,6 +771,12 @@ class DisaggregatedEngine(ServingEngine):
         self.handoff_wall_s += wall
         self.handoff_wire_bytes += wire_now
         self.handoff_payload_bytes += self._paged_geometry_bytes(n, L)
+        trace.tracer().emit(
+            "transfer", t0, t0 + wall, tag=self.trace_tag,
+            mechanism=self.transfer_mode.name, wire_bytes=wire_now,
+            requests=len(art.reqs),
+            charge="measured" if measured else "modeled",
+        )
         share = wall / max(len(art.reqs), 1)
         # per-request useful bytes = each row's UNCACHED suffix (its reused
         # prefix rode an earlier handoff; charging it again would double-
@@ -853,6 +860,12 @@ class DisaggregatedEngine(ServingEngine):
         self.handoffs += 1
         self.handoff_wall_s += wall
         self.handoff_wire_bytes += wire_now
+        trace.tracer().emit(
+            "transfer", t0, t0 + wall, tag=self.trace_tag,
+            mechanism=self.transfer_mode.name, wire_bytes=wire_now,
+            requests=len(art.reqs),
+            charge="measured" if measured else "modeled",
+        )
         share = wall / max(len(art.reqs), 1)
         # per-request TRUE cache lengths ride the (already materialized)
         # landed metadata — for feature-carrying requests the cache extends
@@ -899,6 +912,16 @@ class DisaggregatedEngine(ServingEngine):
         # warm_s rides along so the caller excludes it from 'preprocess';
         # the charged transfer wall above is the steady-state `wall` only
         return art, wall + warm_s
+
+    def counters(self) -> dict:
+        out = super().counters()
+        out.update(
+            handoffs=self.handoffs,
+            handoff_wire_bytes=self.handoff_wire_bytes,
+            handoff_request_bytes=self.handoff_request_bytes,
+            handoff_payload_bytes=self.handoff_payload_bytes,
+        )
+        return out
 
     def _ttft_adjust(self, rec) -> float:
         # measured charge: the handoff wall is already inside the latency

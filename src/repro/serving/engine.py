@@ -90,6 +90,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import trace
+from repro.core.obs import Registry
 from repro.core.profiler import ProfileStore, RequestRecord
 from repro.core.transport import PAPER_A2, Transport, TransportProfile
 from repro.models import Model
@@ -568,6 +570,8 @@ class ServingEngine:
         prefix_reuse: bool = True,
         packed: bool = False,
         prefill_chunk: int = 0,
+        debug_stamps: bool = False,
+        trace_tag: str = "engine",
     ):
         self.model = model
         self.params = params
@@ -707,6 +711,21 @@ class ServingEngine:
         self._t_mark = time.perf_counter()
         self.decode_steps = 0  # total whole-batch decode dispatches
         self.useful_steps = 0  # harvested steps that advanced a live request
+        # tracing (core/trace): request-scoped queue/prefill spans, a root
+        # span per finished request, and WINDOWED decode spans (one span
+        # per _TRACE_WINDOW_STEPS harvested steps, not per-step spam).
+        # trace_tag names this engine's process-level span lane so
+        # co-resident engines (in-process cluster replicas) don't share a
+        # sequential-timeline check lane.
+        self.trace_tag = trace_tag
+        self._win_t0: Optional[float] = None
+        self._win_end = 0.0
+        self._win_steps = 0
+        self._win_busy = 0
+        # debug-mode stamp validation: every finished request's
+        # t_arrival/t_first_token/t_done monotonicity is checked (a stage
+        # clock running backwards here means a bad cross-process rebase)
+        self.debug_stamps = bool(debug_stamps)
 
         # jitted entry points; jax.jit retraces per input shape, so the
         # prefill compile count equals the number of distinct bucket shapes.
@@ -917,6 +936,13 @@ class ServingEngine:
             rec.add("copy_in", self.profile.copy_time(rec.bytes_in))
         self._records[req.request_id] = rec
         self.queue.append(req)
+        # instant span marking arrival (the modeled ingress charges are
+        # attrs, not wall: they never happened on this clock)
+        trace.tracer().emit(
+            "submit", req.t_arrival, req.t_arrival,
+            request_id=req.request_id, bytes_in=rec.bytes_in,
+            charge="modeled",
+        )
 
     def _free_slots(self):
         """Admittable slots: the pool's free list minus slots a chunked
@@ -1137,6 +1163,95 @@ class ServingEngine:
         return 0.0
 
     # ------------------------------------------------------------------ #
+    # Tracing emitters (core/trace) — all no-ops unless tracing is on
+    # ------------------------------------------------------------------ #
+    _TRACE_WINDOW_STEPS = 8  # harvested decode steps per window span
+
+    def _trace_admission(self, path: str, reqs: list, t0: float, now: float,
+                         dt: float, n: int, **attrs):
+        """Per admitted request: the measured queue-wait span (submit ->
+        admission pick, exactly the charged 'queue' stage) and the
+        prefill span over the admission's dispatch->completion interval
+        (each request's charge is its dt/n share, carried as an attr)."""
+        tr = trace.tracer()
+        if not tr.enabled:
+            return
+        for req in reqs:
+            rec = self._records[req.request_id]
+            tr.emit("queue", rec.t_issue, t0, request_id=req.request_id)
+            tr.emit(f"prefill.{path}", t0, now, request_id=req.request_id,
+                    share_s=dt / max(n, 1), n=n, **attrs)
+
+    def _trace_note_step(self, t_end: float, dt: float, busy: int):
+        """Accumulate one harvested decode step into the open decode
+        window; flush a ``decode.window`` span every
+        ``_TRACE_WINDOW_STEPS`` steps (windowed, never per-step spam).
+        Step intervals are contiguous chains of the inference clock
+        (``_t_mark``), so the window span's wall is exactly the sum of
+        the charged inference walls it covers."""
+        if not trace.tracer().enabled:
+            return
+        if self._win_t0 is None:
+            self._win_t0 = t_end - dt
+        self._win_end = t_end
+        self._win_steps += 1
+        self._win_busy += busy
+        if self._win_steps >= self._TRACE_WINDOW_STEPS:
+            self._trace_flush_window()
+
+    def _trace_flush_window(self):
+        """Emit and reset the open decode window (called at the step
+        threshold, before every inference-clock reset — prefill
+        admissions and idle restarts — and at drain end via
+        :meth:`trace_flush`, so a window never spans a gap)."""
+        if self._win_t0 is not None and self._win_steps:
+            # fixed thread label: window flushes can run on whichever
+            # pipeline thread resets the inference clock, but the windows
+            # themselves chain one logical timeline per engine
+            trace.tracer().emit(
+                "decode.window", self._win_t0, self._win_end,
+                thread="decode-window", steps=self._win_steps,
+                busy_slot_steps=self._win_busy, tag=self.trace_tag,
+            )
+        self._win_t0 = None
+        self._win_steps = 0
+        self._win_busy = 0
+
+    def trace_flush(self):
+        """Flush any open windowed trace state (drain boundaries)."""
+        self._trace_flush_window()
+
+    # ------------------------------------------------------------------ #
+    # Metrics registry (core/obs): the query plane over the ad-hoc
+    # counter attributes the hot paths charge with bare integer adds
+    # ------------------------------------------------------------------ #
+    def counters(self) -> dict:
+        """The engine's ad-hoc counters as one plain dict."""
+        return {
+            "prefill_tokens_total": self.prefill_tokens_total,
+            "prefill_tokens_uncached": self.prefill_tokens_uncached,
+            "prefill_padded_tokens": self.prefill_padded_tokens,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefill_compiles": self.prefill_compile_count,
+            "decode_steps": self.decode_steps,
+            "useful_steps": self.useful_steps,
+            "requests_finished": len(self.store.records),
+        }
+
+    def metrics_snapshot(self) -> dict:
+        """Counters + live-load gauges absorbed into a fresh
+        :class:`~repro.core.obs.Registry` and snapshotted (what
+        ``ServingCluster.telemetry()`` embeds per replica)."""
+        reg = Registry()
+        reg.ingest_counters(self.counters(), prefix="engine.")
+        reg.gauge("engine.queue_depth").set(len(self.queue))
+        reg.gauge("engine.occupancy").set(
+            sum(1 for s in self.pool.slots if s is not None)
+        )
+        return reg.snapshot()
+
+    # ------------------------------------------------------------------ #
     # Admission
     # ------------------------------------------------------------------ #
     def _admit(self):
@@ -1216,6 +1331,8 @@ class ServingEngine:
         dt = max(time.perf_counter() - t0 - t_xfer, 0.0)
         self._prefill_shapes.add(("bucket", L))
         now = time.perf_counter()
+        self._trace_flush_window()  # decode windows never span a prefill
+        self._trace_admission("bucket", reqs, t0, now, dt, n, bucket=L)
         for j, (req, slot) in enumerate(zip(reqs, slots)):
             rec = self._records[req.request_id]
             # pre-admission wait: submit -> this admission picking the
@@ -1305,6 +1422,8 @@ class ServingEngine:
         toks_host = np.asarray(art.next_tokens)  # reprolint: disable=RL001 deliberate fence: packed 'preprocess' includes prefill device completion
         dt = max(time.perf_counter() - t0 - t_xfer, 0.0)
         now = time.perf_counter()
+        self._trace_flush_window()
+        self._trace_admission("packed", reqs, t0, now, dt, n, packed_width=T)
         for j, (req, slot) in enumerate(zip(reqs, slots)):
             rec = self._records[req.request_id]
             rec.add("queue", max(t0 - rec.t_issue, 0.0))
@@ -1354,6 +1473,8 @@ class ServingEngine:
         if job.done == 0:
             # pre-admission wait ends at the first chunk's dispatch
             rec.add("queue", max(t0 - rec.t_issue, 0.0))
+            trace.tracer().emit("queue", rec.t_issue, t0,
+                                request_id=job.req.request_id)
         n = ((P - 1) % C) + 1 if job.done == 0 else C
         toks = np.zeros((1, C), np.int32)
         toks[0, :n] = job.req.prompt_tokens[job.done:job.done + n]
@@ -1368,7 +1489,11 @@ class ServingEngine:
         self._prefill_shapes.add(("chunk", C))
         if job.done < P:
             np.asarray(next_tok)  # reprolint: disable=RL001 deliberate fence: chunk 'preprocess' includes device completion (and bounds host run-ahead to one chunk)
-            rec.add("preprocess", max(time.perf_counter() - t0, 0.0))
+            t1 = time.perf_counter()
+            rec.add("preprocess", max(t1 - t0, 0.0))
+            trace.tracer().emit("prefill.chunk", t0, t1,
+                                request_id=job.req.request_id,
+                                chunk=C, done=job.done, prompt=P)
             return
         # final chunk: shape the prior into a standard bucketed-style
         # artifact (row dim padded to npad, OOB dummy rows) and splice
@@ -1397,6 +1522,10 @@ class ServingEngine:
         rec.add("preprocess", dt)
         job.req.generated.append(tok0)
         now = time.perf_counter()
+        self._trace_flush_window()
+        trace.tracer().emit("prefill.chunk", t0, now,
+                            request_id=job.req.request_id,
+                            chunk=C, done=job.done, prompt=P, final=True)
         job.req.t_first_token = now
         self._place(job.req, job.slot)
         self._t_mark = now  # chunk time is "preprocess", not "inference"
@@ -1441,6 +1570,9 @@ class ServingEngine:
         rec.add("preprocess", dt)
         req.generated.append(tok_host)
         req.t_first_token = time.perf_counter()
+        self._trace_flush_window()
+        self._trace_admission("exact", [req], t0, req.t_first_token, dt, 1,
+                              prompt=len(req.prompt_tokens))
         self._place(req, slot)
         self._t_mark = req.t_first_token  # prefill time is not "inference"
 
@@ -1649,6 +1781,11 @@ class ServingEngine:
         # index must take its block references first
         self._index_insert(jobs, store_ctx)
         now = time.perf_counter()
+        self._trace_flush_window()
+        self._trace_admission(
+            "suffix" if has_prior else "paged",
+            [job.req for job in jobs], t0, now, dt, n, bucket=L,
+        )
         for j, job in enumerate(jobs):
             rec = self._records[job.req.request_id]
             rec.add("queue", max(t0 - rec.t_issue, 0.0))
@@ -1703,6 +1840,7 @@ class ServingEngine:
             return
         if not self.pool.window and outstanding == 0:
             # pipeline (re)start: don't charge idle time to "inference"
+            self._trace_flush_window()  # a window never spans an idle gap
             self._t_mark = time.perf_counter()
         limit = self._window_limit()
         while self.pool.fill_one(self.decode_params, limit=limit):
@@ -1734,6 +1872,7 @@ class ServingEngine:
         ]
         if live:
             self.useful_steps += 1
+        self._trace_note_step(self._t_mark, dt, len(live))
         done: list[Response] = []
         for i, req in live:
             rec = self._records[req.request_id]
@@ -1785,6 +1924,18 @@ class ServingEngine:
         adj = self._ttft_adjust(rec)
         rec.t_done = time.perf_counter() + ingress + egress + adj
         req.t_done = rec.t_done
+        if self.debug_stamps:
+            trace.validate_stamps(
+                req.t_arrival, req.t_first_token, req.t_done,
+                where=f"request {req.request_id} at finish",
+            )
+        # root span: the whole request interval (modeled ingress/egress
+        # folded into t_done bounds every charged stage, measured or not)
+        trace.tracer().emit(
+            "request", rec.t_issue, rec.t_done, request_id=req.request_id,
+            tokens=len(req.generated), bytes_in=rec.bytes_in,
+            bytes_out=rec.bytes_out,
+        )
         self.store.add(rec)
         return Response(
             request_id=req.request_id,
@@ -1831,6 +1982,7 @@ class ServingEngine:
             out.extend(self.step())
             if self.idle:
                 break
+        self.trace_flush()
         return out
 
     # ------------------------------------------------------------------ #
@@ -1880,6 +2032,7 @@ class ServingEngine:
         req.generated.append(next_tok)
         self.pool.slots[slot] = req
         req.t_first_token = time.perf_counter()
+        self._trace_admission("legacy", [req], t0, req.t_first_token, dt, 1)
 
     def _admit_legacy(self):
         while self.queue and self._free_slots():
@@ -1907,6 +2060,7 @@ class ServingEngine:
         self.useful_steps += 1  # sync loop only ever steps live slots
         logits.block_until_ready()
         dt = time.perf_counter() - t0
+        self._trace_note_step(t0 + dt, dt, len(active))
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
         self.tokens = jnp.asarray(next_tokens[:, None], jnp.int32)
 
@@ -2045,6 +2199,7 @@ class EnginePipeline:
         eng = self.engine
         while not self._stop.is_set():
             entry = None
+            t0 = time.perf_counter()
             with self._lock:
                 eng._admit()
                 if eng._prefill_finished:  # budget met at prefill time
@@ -2059,6 +2214,8 @@ class EnginePipeline:
                     eng._backlog_entries.append(entry)
                     self._outstanding += 1
             if entry is not None:
+                trace.tracer().emit("pipeline.dispatch", t0,
+                                    time.perf_counter(), tag="pipeline")
                 # NEVER under the lock: a full backlog must block dispatch
                 # without blocking the detokenize thread's finalize
                 self._put(self._harvest_q, entry)
@@ -2072,8 +2229,11 @@ class EnginePipeline:
                 continue
             # the blocking device->host transfer, off every other thread's
             # critical path (no lock: snapshot arrays are read-only here)
+            t0 = time.perf_counter()
             toks, _done = jax.device_get((entry.tokens, entry.done))
-            self._put(self._detok_q, (entry, toks, time.perf_counter()))
+            t_h = time.perf_counter()
+            trace.tracer().emit("pipeline.harvest", t0, t_h, tag="pipeline")
+            self._put(self._detok_q, (entry, toks, t_h))
 
     def _detok_loop(self):
         eng = self.engine
@@ -2082,6 +2242,7 @@ class EnginePipeline:
             if item is None:
                 continue
             entry, toks, t_h = item
+            t0 = time.perf_counter()
             with self._lock:
                 # FIFO edges: the entry being finalized is always the
                 # oldest backlog entry; drop it BEFORE finalize so the
@@ -2098,6 +2259,8 @@ class EnginePipeline:
                 self._outputs.extend(done)
                 self.emitted += len(done)
                 self._outstanding -= 1
+            trace.tracer().emit("pipeline.detokenize", t0,
+                                time.perf_counter(), tag="pipeline")
 
     # ------------------------------------------------------------------ #
     # step()-compatible facade
@@ -2140,7 +2303,13 @@ class EnginePipeline:
             if self.idle:
                 break
             time.sleep(self.poll_s)
+        self.trace_flush()
         return out
+
+    def trace_flush(self):
+        """Flush the engine's open decode-window span (drain boundary)."""
+        with self._lock:
+            self.engine._trace_flush_window()
 
     def load_snapshot(self) -> dict:
         """Router-visible load + conservation counters, read atomically
@@ -2168,6 +2337,11 @@ class EnginePipeline:
                          and not eng.pool.window and not eng._chunk_jobs
                          and self._outstanding == 0 and not self._outputs),
             }
+
+    def metrics_snapshot(self) -> dict:
+        """Engine registry snapshot, read atomically."""
+        with self._lock:
+            return self.engine.metrics_snapshot()
 
     # passthroughs (Gateway / loadgen / tests reach the engine surface)
     @property

@@ -8,6 +8,9 @@ cost plus the protocol-translation overhead. Composing
 
 from __future__ import annotations
 
+import time
+
+from repro.core import trace
 from repro.core.transport import PAPER_A2, Transport, TransportProfile
 
 
@@ -25,6 +28,13 @@ class Gateway:
         rec = self.engine._records[req.request_id]
         hop = self.profile.wire_time(self.first_hop, rec.bytes_in)
         rec.add("request", hop + self.overhead)
+        # instant span: the hop cost is MODELED (profile wire time), not a
+        # measured wall — the duration rides as an attr, not the interval
+        trace.tracer().emit(
+            "gateway.submit", now, now, request_id=req.request_id,
+            hop_s=hop + self.overhead, transport=self.first_hop.name,
+            bytes=rec.bytes_in, charge="modeled",
+        )
         if self.first_hop is Transport.TCP:
             rec.cpu_s += rec.bytes_in * self.profile.tcp_cpu_per_byte
 
@@ -35,6 +45,12 @@ class Gateway:
             hop = self.profile.wire_time(self.first_hop, nbytes) + self.overhead
             rsp.stage_s["response"] = rsp.stage_s.get("response", 0.0) + hop
             rsp.total_s += hop
+            tnow = time.perf_counter()
+            trace.tracer().emit(
+                "gateway.response", tnow, tnow, request_id=rsp.request_id,
+                hop_s=hop, transport=self.first_hop.name, bytes=nbytes,
+                charge="modeled",
+            )
             rec = self._records.get(rsp.request_id)
             if rec is not None:
                 # charge the STORED record symmetrically with ``submit``'s
@@ -63,8 +79,6 @@ class Gateway:
                 # downstream progress happens on its own threads or in
                 # replica processes; polling harder only burns the CPU
                 # the paper's TCP path is trying to account for
-                import time
-
                 time.sleep(0.001)
         return out
 

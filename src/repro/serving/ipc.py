@@ -59,6 +59,7 @@ import sys
 import time
 from typing import Optional
 
+from repro.core import trace
 from repro.core.profiler import RequestRecord
 from repro.serving.request import Request, Response
 
@@ -290,10 +291,13 @@ class ReplicaClient:
     def _call(self, op: str, payload, *, timeout_s: Optional[float] = None):
         if self._closed:
             raise ReplicaError(f"{self.label}: client already closed")
+        t0 = time.perf_counter()
+        sent = 0
         try:
             if timeout_s is not None:
                 self.sock.settimeout(timeout_s)
-            self.bytes_sent += send_msg(self.sock, op, payload)
+            sent = send_msg(self.sock, op, payload)
+            self.bytes_sent += sent
             rop, rpayload, n = recv_msg(self.sock)
         except socket.timeout as e:
             # a wedged worker must never hang the router: kill + surface
@@ -312,6 +316,10 @@ class ReplicaClient:
                 except OSError:
                     pass
         self.bytes_recv += n
+        trace.tracer().emit(
+            f"rpc.{op}", t0, time.perf_counter(), tag=self.label,
+            bytes_sent=sent, bytes_recv=n,
+        )
         if rop == "error":
             raise ReplicaError(
                 f"{self.label}: worker raised during {op!r}:\n"
@@ -360,9 +368,21 @@ class ReplicaClient:
         self.request_payload_bytes += req.payload_bytes
         return self._call("submit", request_to_wire(req))
 
+    def _ingest_spans(self, out: dict) -> None:
+        """Fold worker-emitted spans (piggybacked on the reply frame) into
+        the parent's trace buffer, rebased onto the parent clock via the
+        handshake ``clock_offset`` and relabeled with this replica's
+        label so the merged timeline names the process."""
+        spans = out.get("spans")
+        if spans:
+            trace.tracer().ingest_wire(
+                spans, offset=self.clock_offset, process=self.label
+            )
+
     def harvest(self):
         """Finished (Response, RequestRecord) pairs + the load snapshot."""
         out = self._call("harvest", None)
+        self._ingest_spans(out)
         pairs = [
             (response_from_wire(r), record_from_wire(rec))
             for r, rec in out["done"]
@@ -373,13 +393,16 @@ class ReplicaClient:
         return self._call("load", None)
 
     def telemetry(self) -> dict:
-        return self._call("telemetry", None)
+        out = self._call("telemetry", None)
+        self._ingest_spans(out)
+        return out
 
     def drain(self, deadline_s: float = 120.0):
         """Block until the worker's pipeline is idle (or the deadline
         lapses worker-side); returns the remaining finished pairs."""
         out = self._call("drain", {"deadline_s": deadline_s},
                          timeout_s=deadline_s + 10.0)
+        self._ingest_spans(out)
         return [
             (response_from_wire(r), record_from_wire(rec))
             for r, rec in out["done"]

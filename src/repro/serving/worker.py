@@ -54,6 +54,12 @@ def _build_pipeline(spec: dict):
     # weights from the seed, not the wire: deterministic reconstruction is
     # the cheap, exact alternative to shipping tensors through the RPC
     params = model.init(jax.random.key(int(spec.get("param_seed", 0))))
+    if spec.get("tracing"):
+        from repro.core import trace
+
+        # spans are stamped with THIS process's perf_counter; the parent
+        # rebases on ingest and overrides the label with the replica name
+        trace.enable_tracing(process=spec.get("trace_label", "worker"))
     engine_kw = dict(spec.get("engine_kw") or {})
     if spec.get("engine", "fused") == "disagg":
         from repro.serving.disagg import DisaggregatedEngine
@@ -68,6 +74,14 @@ def _snapshot(pipe) -> dict:
     return pipe.load_snapshot()
 
 
+def _spans() -> list:
+    """Drain this process's trace buffer as wire tuples — piggybacked on
+    harvest/telemetry/drain replies, rebased parent-side."""
+    from repro.core import trace
+
+    return trace.tracer().drain_wire()
+
+
 def _harvest(pipe) -> dict:
     """Finished responses + their records since the last harvest, in
     completion order, plus a fresh load snapshot."""
@@ -77,7 +91,7 @@ def _harvest(pipe) -> dict:
     for rsp in pipe.step():
         rec = pipe.engine._records[rsp.request_id]
         done.append((ipc.response_to_wire(rsp), ipc.record_to_wire(rec)))
-    return {"done": done, "load": _snapshot(pipe)}
+    return {"done": done, "load": _snapshot(pipe), "spans": _spans()}
 
 
 def _telemetry(pipe) -> dict:
@@ -91,6 +105,8 @@ def _telemetry(pipe) -> dict:
         "prefill_tokens_uncached": eng.prefill_tokens_uncached,
         "prefix_hits": eng.prefix_hits,
         "warm_s": eng.warm_s,
+        "metrics": pipe.metrics_snapshot(),
+        "spans": _spans(),
     }
 
 
@@ -114,7 +130,8 @@ def _drain(pipe, deadline_s: float) -> dict:
     for rsp in pipe.step():  # finals surfaced by the last transition to idle
         rec = pipe.engine._records[rsp.request_id]
         done.append((ipc.response_to_wire(rsp), ipc.record_to_wire(rec)))
-    return {"done": done, "load": _snapshot(pipe)}
+    pipe.trace_flush()  # close the open decode window before shipping
+    return {"done": done, "load": _snapshot(pipe), "spans": _spans()}
 
 
 def serve(port: int) -> int:

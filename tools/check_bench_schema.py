@@ -45,6 +45,13 @@ SCHEMAS = {
         "packed_prefill.head_of_line.tpot_bound_ok",
         "ragged_decode_kernel.ragged_lens_us",
         "ragged_decode_kernel.dense_lens_us",
+        "tracing.overhead.off_wall_s",
+        "tracing.overhead.on_wall_s",
+        "tracing.overhead.overhead_frac",
+        "tracing.overhead.overhead_ok",
+        "tracing.reconcile.n_requests",
+        "tracing.reconcile.n_spans",
+        "tracing.reconcile.reconcile_ok",
     ],
     "BENCH_disagg.json": [
         "benchmark",
@@ -56,6 +63,7 @@ SCHEMAS = {
         "disagg.disaggregated.*.handoff_charge_s_mean",
         "disagg.disaggregated.*.ttft_s_mean",
         "disagg.disaggregated.*.token_match_vs_single_engine",
+        "disagg.disaggregated.*.stage_walls_s",
         "disagg.ordering_ok.handoff_charge",
         "disagg.occupancy_sweep.*.padded_tree_wire_bytes",
         "disagg.occupancy_sweep.*.occ1_short_vs_padded_tree",
@@ -88,6 +96,11 @@ SCHEMAS = {
         "cluster.process_cluster.token_identical_vs_inprocess",
         "cluster.process_cluster.request_bytes_conserved",
         "cluster.process_cluster.records_conserved",
+        "cluster.process_cluster.trace.path",
+        "cluster.process_cluster.trace.processes",
+        "cluster.process_cluster.trace.spans",
+        "cluster.process_cluster.trace.events",
+        "cluster.process_cluster.trace.export_ok",
     ],
     "BENCH_prefix.json": [
         "benchmark",
@@ -135,11 +148,33 @@ def _resolve(node, parts, path_so_far=""):
     yield from _resolve(node[head], rest, f"{path_so_far}.{head}".lstrip("."))
 
 
+def check_chrome_trace(path: Path) -> list:
+    """BENCH_trace.json is a Chrome trace-event file, not a keyed BENCH
+    dict, so it gets its own shape check: parseable JSON, a non-empty
+    ``traceEvents`` list, and spans from at least two processes (the
+    merged-clock claim — router plus one worker on one timeline)."""
+    if not path.exists():
+        return [f"{path.name}: missing (run benchmarks.cluster)"]
+    try:
+        data = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{path.name}: does not parse: {e}"]
+    events = data.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path.name}: traceEvents missing or empty"]
+    pids = {e.get("pid") for e in events if e.get("ph") == "X"}
+    if len(pids) < 2:
+        return [f"{path.name}: spans from {len(pids)} process(es) — "
+                f"need >= 2 (router + worker) on the merged clock"]
+    return []
+
+
 def check() -> list:
     """Return problem strings (missing fields / undocumented leaves /
     missing files)."""
     problems = []
     docs_text = DOCS.read_text()
+    problems.extend(check_chrome_trace(ROOT / "BENCH_trace.json"))
     for fname, paths in SCHEMAS.items():
         f = ROOT / fname
         if not f.exists():

@@ -1,4 +1,4 @@
-"""reprolint rules RL001–RL006: the repo's serving-path invariants.
+"""reprolint rules RL001–RL007: the repo's serving-path invariants.
 
 Each rule protects a specific BENCH claim (see docs/lint.md for the full
 mapping). The common theme: the paper's GDR-vs-TCP deltas are latency
@@ -666,4 +666,49 @@ def rl006(mod: Module, ctx: Context) -> list:
                     f"and surface the traceback like "
                     f"EnginePipeline._run_guarded)",
                 ))
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+# RL007: trace coverage
+# --------------------------------------------------------------------------- #
+def _emits_trace(mod: Module, fn: ast.AST) -> bool:
+    """True when the function body reaches a span emitter: a ``.emit()``
+    call (``trace.tracer().emit(...)``) or a call to a ``_trace*`` /
+    ``trace_flush`` helper (the engine's admission/window emitters)."""
+    for node in _walk_local(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Attribute):
+            attr = node.func.attr
+            if attr == "emit" or attr == "trace_flush" \
+                    or attr.startswith("_trace"):
+                return True
+        elif isinstance(node.func, ast.Name) \
+                and node.func.id.startswith("_trace"):
+            return True
+    return False
+
+
+@rule(
+    "RL007", "trace-coverage",
+    "every timed-stage function in a hot-path file also emits a span "
+    "(directly via .emit() or through a _trace* helper) so charged "
+    "stages stay reconcilable against the trace",
+    interested=_in_hot_file,
+)
+def rl007(mod: Module, ctx: Context) -> list:
+    findings = []
+    for qual, fn in mod.functions():
+        if not _is_timed_stage_function(mod, fn):
+            continue
+        if _emits_trace(mod, fn):
+            continue
+        findings.append(Finding(
+            "RL007", mod.rel, fn.lineno, qual,
+            f"timed-stage function `{qual}` charges a stage but emits no "
+            f"span — Trace.reconcile() cannot cross-check its charge "
+            f"(call trace.tracer().emit(...) or a _trace* helper, or "
+            f"suppress with the reason the stage is trace-exempt)",
+        ))
     return findings
